@@ -1,0 +1,95 @@
+"""Kernel microbenchmarks: fused sim+metrics throughput (the paper's hot
+loop) and the unfused baseline, on this host (CPU: jnp path; the Pallas
+kernel is timed in interpret mode only for reference — its target is TPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import golden as G, metrics as M, simulate as S
+from repro.core.genome import random_genome
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_eval_throughput(width: int = 8, lam: int = 8):
+    """Candidate-evaluations/s: fused (single pass, what the TPU kernel
+    does) vs unfused (sim -> unpack -> 7 metric passes)."""
+    gold, spec = G.array_multiplier(width, n_n=400)
+    planes = S.input_planes(spec.n_i)
+    gvals = jnp.asarray(G.golden_values(width, "mul"))
+    genomes = jax.vmap(lambda k: random_genome(k, spec))(
+        jax.random.split(jax.random.PRNGKey(0), lam))
+
+    @jax.jit
+    def fused(gs):
+        return jax.vmap(
+            lambda g: ref.cgp_eval_ref(g, spec, planes, gvals, 256.0))(gs)
+
+    @jax.jit
+    def unfused(gs):
+        def one(g):
+            vals = S.simulate_values(g, spec, planes)       # pass 1
+            met = M.metrics_from_values(gvals, vals, spec.n_o)  # pass 2
+            wires = S.simulate_planes(g, spec, planes)      # re-sim for p
+            p = S.signal_probabilities(wires[spec.n_i:],
+                                       spec.n_inputs_total)
+            return met, p
+        return jax.vmap(one)(gs)
+
+    t_f = _time(fused, genomes)
+    t_u = _time(unfused, genomes)
+    evals = lam
+    return {
+        "fused_us_per_eval": 1e6 * t_f / evals,
+        "unfused_us_per_eval": 1e6 * t_u / evals,
+        "fused_speedup": t_u / t_f,
+        "inputs_per_s_fused": evals * spec.n_inputs_total / t_f,
+    }
+
+
+def bench_pallas_interpret(width: int = 6):
+    """Interpret-mode cost of the Pallas kernel (correctness path only —
+    the performance target is the TPU lowering)."""
+    gold, spec = G.array_multiplier(width, n_n=250)
+    planes = S.input_planes(spec.n_i)
+    gvals = jnp.asarray(G.golden_values(width, "mul"))
+    t_k = _time(lambda: ops.cgp_eval(gold, spec, planes, gvals), reps=3)
+    t_r = _time(lambda: ref.cgp_eval_ref(gold, spec, planes, gvals, 256.0),
+                reps=3)
+    return {"pallas_interpret_ms": 1e3 * t_k, "jnp_ref_ms": 1e3 * t_r}
+
+
+def bench_generation_rate(width: int = 8):
+    """End-to-end (1+λ) generations/s — the paper's search-speed metric."""
+    from repro.core.evolve import EvolveConfig, evolve
+    from repro.core.fitness import ConstraintSpec
+    from repro.core.search import SearchConfig, problem_arrays
+    cfg = SearchConfig(width=width, n_n=400,
+                       evolve=EvolveConfig(generations=100, lam=8))
+    gold, spec, planes, gvals, gpower = problem_arrays(cfg)
+    thr = jnp.asarray(ConstraintSpec(mae=1.0).thresholds())
+
+    def run(seed):
+        return evolve(spec, cfg.evolve, gold, thr, planes, gvals, gpower,
+                      jax.random.PRNGKey(seed)).best_fit
+
+    run(0)  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(1))
+    dt = time.perf_counter() - t0
+    return {"generations_per_s": 100 / dt,
+            "evals_per_s": 100 * 8 / dt,
+            "exhaustive_inputs_per_s": 100 * 8 * spec.n_inputs_total / dt}

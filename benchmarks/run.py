@@ -1,0 +1,82 @@
+"""Benchmark runner: one function per paper figure + kernel micro.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the harness contract) and
+writes full JSON to experiments/paper/.  Figure benchmarks are reduced-budget
+paper reproductions (see benchmarks/paper_figures.py docstring); claim
+booleans are summarized at the end and consumed by EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig8,micro
+  REPRO_BENCH_GENS=300 ... python -m benchmarks.run       # quicker pass
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig5,fig6,fig7,fig8,fig9,fig10,"
+                         "fig11,fig12,fig14,micro")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import kernel_micro, paper_figures
+
+    rows = []
+
+    def emit(name, us, derived):
+        rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived", flush=True)
+
+    # kernel microbenchmarks -------------------------------------------------
+    if only is None or "micro" in only:
+        t0 = time.perf_counter()
+        r = kernel_micro.bench_eval_throughput()
+        emit("kernel_fused_eval", r["fused_us_per_eval"],
+             f"speedup_vs_unfused={r['fused_speedup']:.2f}")
+        emit("kernel_eval_inputs_per_s", 0.0,
+             f"{r['inputs_per_s_fused']:.3e}")
+        r = kernel_micro.bench_generation_rate()
+        emit("evolve_generation", 1e6 / max(r["generations_per_s"], 1e-9),
+             f"exhaustive_inputs_per_s={r['exhaustive_inputs_per_s']:.3e}")
+        r = kernel_micro.bench_pallas_interpret()
+        emit("cgp_pallas_interpret_ms", 1e3 * r["pallas_interpret_ms"],
+             f"jnp_ref_ms={r['jnp_ref_ms']:.1f}")
+
+    # paper figures ----------------------------------------------------------
+    fig_map = {f.__name__.split("_")[0]: f
+               for f in paper_figures.ALL_FIGURES}
+    claims_all = {}
+    for short, fn in fig_map.items():
+        if only is not None and short not in only:
+            continue
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        ok = all(v for v in out["claims"].values()
+                 if isinstance(v, bool))
+        claims_all[out["figure"]] = out["claims"]
+        emit(out["figure"], 1e6 * dt, f"claims_ok={ok}")
+
+    if claims_all:
+        import os
+        os.makedirs("experiments/paper", exist_ok=True)
+        with open("experiments/paper/claims_summary.json", "w") as f:
+            json.dump(claims_all, f, indent=1, default=str)
+        n_ok = sum(all(v for v in c.values() if isinstance(v, bool))
+                   for c in claims_all.values())
+        print(f"# paper-claim check: {n_ok}/{len(claims_all)} figures "
+              f"reproduce their qualitative claims", flush=True)
+
+
+if __name__ == "__main__":
+    main()

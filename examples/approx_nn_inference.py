@@ -1,0 +1,85 @@
+"""Deploy an evolved approximate multiplier inside an LM (paper ref. [4]'s
+use case, the motivation for the ACC0 metric).
+
+    PYTHONPATH=src python examples/approx_nn_inference.py
+
+1. Evolves an 8x8 approximate multiplier under MAE+ER (+ACC0) constraints.
+2. Builds its 256x256 product LUT (``core.library.multiplier_lut``) — on
+   silicon this circuit replaces the MAC multipliers; here the LUT
+   *emulates* it exactly.
+3. Runs a small transformer with every projection matmul routed through the
+   emulated approximate arithmetic (models/quant.py) and reports the
+   model-level degradation (logit error / perplexity delta) vs exact fp32
+   and vs exact-int8.
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec
+from repro.core.genome import CGPSpec
+from repro.core.library import multiplier_lut
+from repro.core.search import SearchConfig, run_search
+from repro.models import model as M
+from repro.models import quant
+
+
+def perplexity(params, toks, cfg):
+    loss = M.lm_loss(params, toks, toks, cfg)
+    return float(jnp.exp(loss))
+
+
+def main():
+    # 1. evolve the circuit (short budget; use launch.evolve for real runs)
+    scfg = SearchConfig(width=8, n_n=400,
+                        evolve=EvolveConfig(generations=600, lam=8))
+    con = ConstraintSpec(mae=0.1, er=95.0, acc0=True)
+    print(f"evolving 8x8 multiplier under {con.describe()} ...")
+    rec, _ = run_search(scfg, con, seed=0)
+    print(f"  feasible={rec.feasible} power_rel={rec.power_rel:.3f} "
+          f"mae={rec.metrics[0]:.4f}% er={rec.metrics[2]:.1f}%")
+
+    # 2. deployment artifact
+    from repro.core.library import record_to_genome
+    genome = __import__("repro.core.genome", fromlist=["Genome"]).Genome(
+        jnp.asarray(rec.genome_nodes), jnp.asarray(rec.genome_outs))
+    lut = multiplier_lut(genome, CGPSpec(16, 16, 400))
+    exact = np.arange(256)[:, None] * np.arange(256)[None, :]
+    print(f"  LUT mean |err| = {np.abs(lut - exact).mean():.2f} "
+          f"(of max product 65025)")
+
+    # 3. model-level impact
+    cfg = ModelConfig(name="toy", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=2, d_ff=128, vocab=256)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    toks = jax.random.randint(key, (4, 64), 0, cfg.vocab)
+
+    ppl_fp = perplexity(params, toks, cfg)
+    cfg_q = dataclasses.replace(cfg, approx_matmul=True)
+
+    quant.set_multiplier_lut(None)           # exact int8 baseline
+    ppl_int8 = perplexity(params, toks, cfg_q)
+    quant.set_multiplier_lut(lut)            # evolved approximate circuit
+    ppl_approx = perplexity(params, toks, cfg_q)
+    quant.set_multiplier_lut(None)
+
+    print(f"\nperplexity  fp32:        {ppl_fp:.4f}")
+    print(f"perplexity  exact-int8:  {ppl_int8:.4f} "
+          f"(quantization cost {100 * (ppl_int8 / ppl_fp - 1):+.2f}%)")
+    print(f"perplexity  approx-mult: {ppl_approx:.4f} "
+          f"(total cost {100 * (ppl_approx / ppl_fp - 1):+.2f}%)")
+    print(f"\n=> the evolved circuit at {rec.power_rel:.2f}x power adds "
+          f"{100 * (ppl_approx / ppl_int8 - 1):+.2f}% perplexity over "
+          f"exact int8 arithmetic")
+
+
+if __name__ == "__main__":
+    main()

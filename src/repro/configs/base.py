@@ -1,0 +1,171 @@
+"""Config system: model/shape/run configs + the architecture registry.
+
+Every assigned architecture is a module ``configs/<id>.py`` exposing
+``CONFIG`` (exact paper/HF shape), ``reduced()`` (CPU smoke variant) and the
+four standard input shapes.  ``--arch <id>`` resolves through ``registry()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside the repeating period of a decoder stack."""
+    kind: str = "attn"          # "attn" | "ssm"
+    moe: bool = False           # FFN is a mixture-of-experts
+    cross_attn: bool = False    # cross-attention to frontend embeddings
+    has_ffn: bool = True        # mamba2-only stacks have no FFN
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    headdim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128            # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 768
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 1024
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    act: str = "swiglu"
+    tie_embeddings: bool = True
+    period: tuple[LayerSpec, ...] = (LayerSpec(),)
+    ssm: SSMConfig = SSMConfig()
+    moe: MoEConfig = MoEConfig()
+    # frontends (STUBS per task spec: input_specs provides embeddings/tokens)
+    frontend: str = "none"      # none | vision | audio
+    n_img_tokens: int = 0
+    n_codebooks: int = 0
+    # numerics / performance knobs
+    param_dtype: str = "float32"
+    act_dtype: str = "float32"
+    remat: bool = False
+    # "all" = recompute everything (min memory);
+    # "block_outputs" = save each mixer/FFN residual-stream output so the
+    # backward recompute's collectives (TP/EP psums) dead-code away
+    # (EXPERIMENTS.md §Perf hillclimb B)
+    remat_policy: str = "all"
+    loss_vocab_chunk: int = 0   # 0 = unchunked cross-entropy
+    approx_matmul: bool = False  # evolved approximate-multiplier emulation
+    scan_layers: bool = True
+    # attention implementation: "blocked" (scan online-softmax, differentiable,
+    # compiles on any backend) | "pallas" (TPU flash kernel) | "naive"
+    attn_impl: str = "blocked"
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % len(self.period) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"period {len(self.period)}")
+        return self.n_layers // len(self.period)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def adtype(self):
+        return jnp.dtype(self.act_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (see task brief: 4 per architecture)."""
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                   # "train" | "prefill" | "decode"
+
+
+# the four standard LM shape cells
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+ARCH_IDS = (
+    "mamba2_1_3b", "phi4_mini_3_8b", "stablelm_1_6b", "stablelm_12b",
+    "llama3_2_1b", "qwen3_moe_30b_a3b", "kimi_k2_1t_a32b",
+    "jamba_1_5_large_398b", "llama3_2_vision_11b", "musicgen_large",
+)
+
+# pure full-attention archs skip long_500k (sub-quadratic required; DESIGN.md)
+SUBQUADRATIC = ("mamba2_1_3b", "jamba_1_5_large_398b")
+
+
+def get_arch(arch_id: str):
+    """Import configs/<arch_id>.py and return its module."""
+    arch_id = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{arch_id}")
+
+
+def shapes_for(arch_id: str) -> tuple[ShapeConfig, ...]:
+    if arch_id in SUBQUADRATIC:
+        return ALL_SHAPES
+    return tuple(s for s in ALL_SHAPES if s is not LONG_500K)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: int | None = None) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation — used by the dry-run lowering and smoke tests.
+    """
+    B = batch_override if batch_override is not None else shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def token_spec(bs, sl):
+        if cfg.frontend == "audio":
+            return sds((bs, sl, cfg.n_codebooks), i32)
+        return sds((bs, sl), i32)
+
+    if shape.mode == "train":
+        specs = {"tokens": token_spec(B, S), "targets": token_spec(B, S)}
+    elif shape.mode == "prefill":
+        specs = {"tokens": token_spec(B, S)}
+    else:  # decode: one new token against a cache of S
+        specs = {"tokens": token_spec(B, 1),
+                 "pos": sds((B,), i32)}
+    if cfg.frontend == "vision":
+        specs["image_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model),
+                                    jnp.dtype(cfg.act_dtype))
+    return specs

@@ -1,0 +1,30 @@
+"""mamba2-1.3b — pure SSM (SSD / state-space duality) [arXiv:2405.21060]
+
+48L d_model=2048, attention-free, d_ff=0, vocab=50280, ssm_state=128.
+Runs ALL four shapes including long_500k (O(1) decode state).
+"""
+from repro.configs.base import (ModelConfig, LayerSpec, SSMConfig, MoEConfig)
+
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=0,
+    vocab=50280, tie_embeddings=True,
+    period=(LayerSpec(kind="ssm", has_ffn=False),),
+    ssm=SSMConfig(d_state=128, expand=2, headdim=64, n_groups=1,
+                  conv_width=4, chunk=256),
+    param_dtype="bfloat16", act_dtype="bfloat16", remat=True,
+    loss_vocab_chunk=512,
+)
+
+OPTIMIZER = "adamw8bit"
+
+
+def reduced() -> ModelConfig:
+    """CPU smoke variant — same family, tiny dims."""
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=0, vocab=256,
+        tie_embeddings=True,
+        period=(LayerSpec(kind="ssm", has_ffn=False),),
+        ssm=SSMConfig(d_state=16, expand=2, headdim=16, chunk=16))

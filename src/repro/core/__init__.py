@@ -1,0 +1,18 @@
+"""The paper's primary contribution: error-oriented CGP approximation of
+arithmetic circuits under COMBINED error constraints (Eq. 8/9), implemented
+as a jit/shard_map-distributed JAX system.  See DESIGN.md.
+"""
+from repro.core.fitness import ConstraintSpec, feasible, fitness
+from repro.core.genome import CGPSpec, Genome, random_genome, active_mask
+from repro.core.golden import array_multiplier, golden_values, ripple_carry_adder
+from repro.core.evolve import EvolveConfig, EvolveResult, evolve, evolve_sharded
+from repro.core.search import CircuitRecord, SearchConfig, run_search, run_sweep
+from repro.core import metrics, pareto, power, simulate, library
+
+__all__ = [
+    "ConstraintSpec", "CGPSpec", "Genome", "EvolveConfig", "EvolveResult",
+    "SearchConfig", "CircuitRecord", "array_multiplier", "ripple_carry_adder",
+    "golden_values", "random_genome", "active_mask", "feasible", "fitness",
+    "evolve", "evolve_sharded", "run_search", "run_sweep",
+    "metrics", "pareto", "power", "simulate", "library",
+]

@@ -1,0 +1,81 @@
+"""Combined-constraint fitness — paper Eq. (8) extended to Eq. (9).
+
+    f(C) = cost(C)   if  ∧_i error_i(G, C) ≤ T_i
+           ∞         otherwise
+
+Thresholds are a dense (N_METRICS,) float32 vector aligned with
+``metrics.METRIC_NAMES``; unconstrained entries are +inf.  The boolean metrics
+(ACC0, GAUSS) are encoded as *required levels*: threshold 1.0 means "must
+hold" (metric value must be ≥ 1), -inf means unconstrained — this keeps the
+whole predicate a single vectorized comparison, which matters because the pod
+axis shards over *threshold configurations* (DESIGN.md §2, the paper's
+27k-run sweep).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as M
+
+INF = float("inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstraintSpec:
+    """Human-friendly constraint configuration (thresholds in paper units).
+
+    mae/wce/avg are relative-% of the output range; er/mre are %;
+    acc0/gauss are "must hold" booleans; gauss_sigma parameterizes Gauss_σ.
+    """
+    mae: float = INF
+    wce: float = INF
+    er: float = INF
+    mre: float = INF
+    avg: float = INF
+    acc0: bool = False
+    gauss: bool = False
+    gauss_sigma: float = 256.0
+
+    def thresholds(self) -> np.ndarray:
+        t = np.full((M.N_METRICS,), INF, dtype=np.float32)
+        t[M.MAE], t[M.WCE], t[M.ER] = self.mae, self.wce, self.er
+        t[M.MRE], t[M.AVG] = self.mre, self.avg
+        # boolean metrics: feasible iff value >= required level
+        t[M.ACC0] = 1.0 if self.acc0 else -INF
+        t[M.GAUSS] = 1.0 if self.gauss else -INF
+        return t
+
+    def describe(self) -> str:
+        parts = []
+        for name, v in (("mae", self.mae), ("wce", self.wce), ("er", self.er),
+                        ("mre", self.mre), ("avg", self.avg)):
+            if np.isfinite(v):
+                parts.append(f"{name}<={v:g}%")
+        if self.acc0:
+            parts.append("acc0")
+        if self.gauss:
+            parts.append(f"gauss(sigma={self.gauss_sigma:g})")
+        return "+".join(parts) if parts else "unconstrained"
+
+
+# boolean metrics are lower-bounded, magnitude metrics upper-bounded
+_IS_LOWER_BOUND = np.zeros((M.N_METRICS,), dtype=bool)
+_IS_LOWER_BOUND[M.ACC0] = True
+_IS_LOWER_BOUND[M.GAUSS] = True
+
+
+def feasible(metric_vec: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Eq. (9) predicate: ∧_i error_i ≤ T_i (≥ for required booleans)."""
+    lb = jnp.asarray(_IS_LOWER_BOUND)
+    ok = jnp.where(lb, metric_vec >= thresholds, metric_vec <= thresholds)
+    return jnp.all(ok)
+
+
+def fitness(cost: jax.Array, metric_vec: jax.Array,
+            thresholds: jax.Array) -> jax.Array:
+    """Eq. (8)/(9): cost if all constraints hold else +inf."""
+    return jnp.where(feasible(metric_vec, thresholds), cost, jnp.inf)

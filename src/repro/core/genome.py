@@ -1,0 +1,148 @@
+"""CGP genome representation (paper Sec. III-A).
+
+A candidate circuit with ``n_i`` primary inputs, ``n_o`` primary outputs and
+``n_n`` two-input nodes is encoded exactly as in the paper: each node is
+``(in0, in1, func)`` where the fan-in indices address either a primary input
+(``< n_i``) or an *earlier* node (``n_i + k`` for node ``k``), i.e. full
+levels-back (L = n_n), which forbids feedback by construction.  The genome is
+kept as two int32 arrays so it vmaps/shards trivially:
+
+    nodes : (n_n, 3) int32
+    outs  : (n_o,)   int32
+
+All functions here are jit/vmap-safe unless suffixed ``_np``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gates
+
+
+class Genome(NamedTuple):
+    """A CGP genome; leaves may carry leading batch dims under vmap."""
+    nodes: jax.Array  # (n_n, 3) int32 — (in0, in1, func)
+    outs: jax.Array   # (n_o,)  int32
+
+
+@dataclasses.dataclass(frozen=True)
+class CGPSpec:
+    """Static CGP problem shape (hashable: usable as a jit static arg)."""
+    n_i: int          # primary inputs
+    n_o: int          # primary outputs
+    n_n: int = 400    # nodes (paper: 400)
+    n_funcs: int = gates.N_FUNCS
+
+    @property
+    def n_wires(self) -> int:
+        return self.n_i + self.n_n
+
+    @property
+    def n_genes(self) -> int:
+        return self.n_n * 3 + self.n_o
+
+    @property
+    def n_inputs_total(self) -> int:
+        """Number of exhaustive input combinations 2^n_i."""
+        return 1 << self.n_i
+
+    @property
+    def n_words(self) -> int:
+        """Packed 32-bit words needed to cover the input cube."""
+        return max(1, self.n_inputs_total // 32)
+
+
+def max_fanin_index(spec: CGPSpec) -> np.ndarray:
+    """Exclusive upper bound of a legal fan-in index for each node position."""
+    return spec.n_i + np.arange(spec.n_n, dtype=np.int32)
+
+
+def random_genome(key: jax.Array, spec: CGPSpec) -> Genome:
+    """Uniform random (legal, feed-forward) genome."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    hi = jnp.asarray(max_fanin_index(spec))  # (n_n,)
+    in0 = jax.random.randint(k1, (spec.n_n,), 0, hi)
+    in1 = jax.random.randint(k2, (spec.n_n,), 0, hi)
+    func = jax.random.randint(k3, (spec.n_n,), 0, spec.n_funcs)
+    outs = jax.random.randint(k4, (spec.n_o,), 0, spec.n_wires)
+    return Genome(jnp.stack([in0, in1, func], axis=-1).astype(jnp.int32),
+                  outs.astype(jnp.int32))
+
+
+def validate_genome(genome: Genome, spec: CGPSpec) -> bool:
+    """Host-side legality check (feed-forward indices in range)."""
+    nodes = np.asarray(genome.nodes)
+    outs = np.asarray(genome.outs)
+    if nodes.shape != (spec.n_n, 3) or outs.shape != (spec.n_o,):
+        return False
+    hi = max_fanin_index(spec)
+    ok = (nodes[:, 0] >= 0).all() and (nodes[:, 1] >= 0).all()
+    ok &= (nodes[:, 0] < hi).all() and (nodes[:, 1] < hi).all()
+    ok &= (0 <= nodes[:, 2]).all() and (nodes[:, 2] < spec.n_funcs).all()
+    ok &= (outs >= 0).all() and (outs < spec.n_wires).all()
+    return bool(ok)
+
+
+def active_mask(genome: Genome, spec: CGPSpec) -> jax.Array:
+    """Boolean (n_wires,) mask of wires reachable from the primary outputs.
+
+    Classic CGP "active node" computation (the paper's redundant encoding means
+    most of the 400 nodes are usually inactive).  Because fan-ins always point
+    backwards, a single reverse sweep over the node array suffices; implemented
+    as ``lax.scan`` so it stays jit/vmap friendly.
+    """
+    n_i, n_n = spec.n_i, spec.n_n
+    active0 = jnp.zeros((spec.n_wires,), dtype=bool).at[genome.outs].set(True)
+    one_input = jnp.asarray(gates.ONE_INPUT)
+
+    def step(active, k):
+        # walk nodes from last to first
+        idx = n_n - 1 - k
+        node = genome.nodes[idx]
+        is_act = active[n_i + idx]
+        uses_b = one_input[node[2]] == 0
+        active = active.at[node[0]].set(active[node[0]] | is_act)
+        active = active.at[node[1]].set(active[node[1]] | (is_act & uses_b))
+        return active, None
+
+    active, _ = jax.lax.scan(step, active0, jnp.arange(n_n))
+    return active
+
+
+def active_node_count(genome: Genome, spec: CGPSpec) -> jax.Array:
+    return active_mask(genome, spec)[spec.n_i:].sum()
+
+
+def critical_path_ps(genome: Genome, spec: CGPSpec) -> jax.Array:
+    """Longest-path delay (ps) over *active* wires using per-gate delays."""
+    delay_tab = jnp.asarray(gates.DELAY_PS)
+    one_input = jnp.asarray(gates.ONE_INPUT)
+    act = active_mask(genome, spec)
+    depth0 = jnp.zeros((spec.n_wires,), dtype=jnp.float32)
+
+    def step(depth, k):
+        node = genome.nodes[k]
+        d_in0 = depth[node[0]]
+        d_in1 = jnp.where(one_input[node[2]] == 1, 0.0, depth[node[1]])
+        d = jnp.maximum(d_in0, d_in1) + delay_tab[node[2]]
+        d = jnp.where(act[spec.n_i + k], d, 0.0)
+        return depth.at[spec.n_i + k].set(d), None
+
+    depth, _ = jax.lax.scan(step, depth0, jnp.arange(spec.n_n))
+    return jnp.max(depth[genome.outs])
+
+
+def genome_to_flat(genome: Genome) -> jax.Array:
+    """Flatten to the paper's integer string (n_n*(n_a+1)+n_o ints)."""
+    return jnp.concatenate([genome.nodes.reshape(-1), genome.outs])
+
+
+def flat_to_genome(flat: jax.Array, spec: CGPSpec) -> Genome:
+    nodes = flat[: spec.n_n * 3].reshape(spec.n_n, 3)
+    outs = flat[spec.n_n * 3:]
+    return Genome(nodes, outs)

@@ -1,0 +1,79 @@
+"""EvoApproxLib-style circuit library (paper Sec. I / Fig. 14).
+
+Evolved circuits are stored as JSON records (genome + full characterization)
+so applications can select "the best circuit under constraint X" exactly the
+way the paper describes using EvoApproxLib — and so the approximate-matmul
+deployment path (models/quant.py) can load a multiplier LUT by name.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable
+
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core.genome import CGPSpec, Genome
+from repro.core.search import CircuitRecord
+
+
+def save_library(records: Iterable[CircuitRecord], path: str) -> None:
+    data = []
+    for r in records:
+        data.append({
+            "nodes": np.asarray(r.genome_nodes).tolist(),
+            "outs": np.asarray(r.genome_outs).tolist(),
+            "metrics": {n: float(v) for n, v in
+                        zip(M.METRIC_NAMES, r.metrics)},
+            "power_rel": r.power_rel,
+            "constraint": r.constraint,
+            "seed": r.seed,
+            "feasible": r.feasible,
+            "error_mean": r.error_mean,
+            "error_std": r.error_std,
+        })
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(data, f)
+
+
+def load_library(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def record_to_genome(rec: dict) -> Genome:
+    import jax.numpy as jnp
+    return Genome(jnp.asarray(np.array(rec["nodes"], dtype=np.int32)),
+                  jnp.asarray(np.array(rec["outs"], dtype=np.int32)))
+
+
+def select_best(records: list[dict], **max_metrics: float) -> dict | None:
+    """Pick the lowest-power feasible circuit under the given metric caps.
+
+    Example: ``select_best(lib, mae=0.1, er=50.0)``.
+    """
+    best, best_p = None, float("inf")
+    for r in records:
+        if not r["feasible"]:
+            continue
+        ok = all(r["metrics"][k] <= v if k not in ("acc0", "gauss")
+                 else r["metrics"][k] >= 1.0
+                 for k, v in max_metrics.items())
+        if ok and r["power_rel"] < best_p:
+            best, best_p = r, r["power_rel"]
+    return best
+
+
+def multiplier_lut(genome: Genome, spec: CGPSpec) -> np.ndarray:
+    """(2^w, 2^w) int32 product table of an evolved multiplier.
+
+    This is the deployment artifact consumed by ``models/quant.py`` /
+    ``kernels/lut_matmul.py`` — on silicon the circuit IS the multiplier; on
+    TPU we emulate it exactly through this LUT.
+    """
+    from repro.core.simulate import simulate_values
+    w = spec.n_i // 2
+    vals = np.asarray(simulate_values(genome, spec))
+    return vals.reshape(1 << w, 1 << w).T.copy()  # [a, b] -> a*b approx

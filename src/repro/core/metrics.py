@@ -1,0 +1,182 @@
+"""Error metrics — paper Sec. II, Eq. (1)-(7).
+
+All metrics are computed from integer output values over (a slice of) the
+exhaustive input cube and are returned as *partial sums* so that input-space
+sharding can combine shards with psum/pmax before normalization
+(``finalize_metrics``).  Relativization follows the paper: magnitudes are
+divided by the output range 2^m and reported in percent.
+
+Metric vector layout (used by fitness thresholds; see ``fitness.py``):
+    0 MAE_rel(%)  1 WCE_rel(%)  2 ER(%)  3 MRE(%)  4 |AVG|_rel(%)
+    5 ACC0 (1 = holds)          6 GAUSS (1 = holds)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAE, WCE, ER, MRE, AVG, ACC0, GAUSS = range(7)
+METRIC_NAMES = ("mae", "wce", "er", "mre", "avg", "acc0", "gauss")
+N_METRICS = 7
+
+
+class MetricPartials(NamedTuple):
+    """Shard-combinable raw sums.  Combine: add all but wce_max (max).
+
+    x64 is disabled (the LM substrate must stay 32-bit), so magnitude sums
+    use an EXACT split accumulation: |e| = 256*hi + lo with hi/lo ≤ 2^8-1;
+    partial sums of 2^16 byte-sized terms stay < 2^24 and are exact in
+    float32; the recombination ``256*hi_sum + lo_sum`` is done in float32
+    whose error is ≤ 1 ulp of the total (relative ~6e-8) — documented
+    precision of the metric pipeline (tests assert rtol 1e-5 vs the int64
+    NumPy oracle).
+    """
+    abs_sum: jax.Array    # Σ |g - c|  (float32 via exact split sums)
+    wce_max: jax.Array    # max |g - c|
+    err_count: jax.Array  # #{x : g != c}
+    rel_sum: jax.Array    # Σ |g-c| / max(g, 1)
+    sgn_sum: jax.Array    # Σ (g - c)  (signed, Eq. 6)
+    acc0_bad: jax.Array   # #{x : g = 0 ∧ c != 0}
+    hist: jax.Array       # (n_bins,) signed-error histogram (zeros excluded)
+    count: jax.Array      # #inputs in this slice
+
+
+def gauss_bin_edges(sigma: float, n_side: int = 4) -> np.ndarray:
+    """σ-wide bin edges covering ±n_side·σ, plus two open tail bins."""
+    edges = np.arange(-n_side, n_side + 1, dtype=np.float64) * sigma
+    return edges  # len 2*n_side+1 -> 2*n_side interior bins (+2 tails)
+
+
+def gauss_bin_mass(sigma: float, n_side: int = 4) -> np.ndarray:
+    """Expected probability mass per bin under N(0, σ) (tails included)."""
+    from math import erf, sqrt
+    edges = gauss_bin_edges(sigma, n_side)
+    cdf = np.array([0.5 * (1 + erf(e / (sigma * sqrt(2)))) for e in edges])
+    interior = np.diff(cdf)
+    return np.concatenate([[cdf[0]], interior, [1.0 - cdf[-1]]])
+
+
+def error_partials(golden: jax.Array, cand: jax.Array,
+                   gauss_sigma: float, n_gauss_side: int = 4) -> MetricPartials:
+    """Raw per-slice sums from integer output values.
+
+    Args:
+      golden, cand: (S,) int32 exact / approximate outputs on this cube slice.
+      gauss_sigma:  σ for the Gauss_σ histogram (static).
+    """
+    g = golden.astype(jnp.int32)
+    c = cand.astype(jnp.int32)
+    diff = g - c               # |diff| < 2^n_o ≤ 2^31, exact in int32
+    ad = jnp.abs(diff)
+    nz = diff != 0
+
+    edges = jnp.asarray(gauss_bin_edges(gauss_sigma, n_gauss_side))
+    n_bins = edges.shape[0] + 1
+    bin_idx = jnp.searchsorted(edges, diff.astype(jnp.float32), side="right")
+    hist = jnp.zeros((n_bins,), jnp.int32).at[bin_idx].add(
+        nz.astype(jnp.int32))
+
+    return MetricPartials(
+        abs_sum=_exact_sum(ad),
+        wce_max=ad.max(),
+        err_count=nz.sum(),
+        rel_sum=(ad.astype(jnp.float32) /
+                 jnp.maximum(g, 1).astype(jnp.float32)).sum(),
+        sgn_sum=_exact_sum(jnp.maximum(diff, 0)) -
+                _exact_sum(jnp.maximum(-diff, 0)),
+        acc0_bad=((g == 0) & (c != 0)).sum(),
+        hist=hist,
+        count=jnp.asarray(diff.shape[0], jnp.int32),
+    )
+
+
+def _exact_sum(v: jax.Array) -> jax.Array:
+    """Overflow-safe Σv for 0 ≤ v < 2^24 int32 (see MetricPartials doc)."""
+    hi = (v >> 8).astype(jnp.float32)
+    lo = (v & 0xFF).astype(jnp.float32)
+    return 256.0 * hi.sum() + lo.sum()
+
+
+def combine_partials(p: MetricPartials, axis_name: str) -> MetricPartials:
+    """psum/pmax partials across an input-space-sharding mesh axis."""
+    ps = lambda x: jax.lax.psum(x, axis_name)
+    return MetricPartials(
+        abs_sum=ps(p.abs_sum), wce_max=jax.lax.pmax(p.wce_max, axis_name),
+        err_count=ps(p.err_count), rel_sum=ps(p.rel_sum),
+        sgn_sum=ps(p.sgn_sum), acc0_bad=ps(p.acc0_bad),
+        hist=ps(p.hist), count=ps(p.count))
+
+
+def finalize_metrics(p: MetricPartials, n_o: int, gauss_sigma: float,
+                     n_gauss_side: int = 4,
+                     gauss_slack: float = 1.0) -> jax.Array:
+    """(N_METRICS,) float32 metric vector per the layout above.
+
+    MAE/WCE/|AVG| are relativized to 2^n_o and expressed in PERCENT, as in the
+    paper's figures; ER and MRE are percentages by definition.
+    """
+    out_range = float(1 << n_o)
+    n = p.count.astype(jnp.float32)
+    mae = p.abs_sum.astype(jnp.float32) / n
+    wce = p.wce_max.astype(jnp.float32)
+    er = p.err_count.astype(jnp.float32) / n
+    mre = p.rel_sum / n
+    avg = p.sgn_sum.astype(jnp.float32) / n
+    acc0 = (p.acc0_bad == 0).astype(jnp.float32)
+
+    mass = jnp.asarray(gauss_bin_mass(gauss_sigma, n_gauss_side),
+                       dtype=jnp.float32)
+    allowed = mass * n * gauss_slack
+    gauss_ok = jnp.all(p.hist.astype(jnp.float32) <= allowed)
+
+    return jnp.stack([
+        100.0 * mae / out_range,
+        100.0 * wce / out_range,
+        100.0 * er,
+        100.0 * mre,
+        100.0 * jnp.abs(avg) / out_range,
+        acc0,
+        gauss_ok.astype(jnp.float32),
+    ])
+
+
+def metrics_from_values(golden: jax.Array, cand: jax.Array, n_o: int,
+                        gauss_sigma: float = 256.0) -> jax.Array:
+    """Single-shard convenience: values -> finalized metric vector."""
+    p = error_partials(golden, cand, gauss_sigma)
+    return finalize_metrics(p, n_o, gauss_sigma)
+
+
+def error_moments(golden: jax.Array, cand: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(mean, std) of the signed error — exact, for Fig. 13-style analysis."""
+    diff = (golden.astype(jnp.int64) - cand.astype(jnp.int64)).astype(jnp.float32)
+    return diff.mean(), diff.std()
+
+
+# ------------------------- NumPy oracle (tests) -------------------------
+
+def metrics_np(golden: np.ndarray, cand: np.ndarray, n_o: int,
+               gauss_sigma: float = 256.0, n_gauss_side: int = 4) -> np.ndarray:
+    g = golden.astype(np.int64)
+    c = cand.astype(np.int64)
+    diff = g - c
+    ad = np.abs(diff)
+    n = diff.size
+    out_range = float(1 << n_o)
+    mae = ad.mean()
+    wce = ad.max()
+    er = (diff != 0).mean()
+    mre = (ad / np.maximum(g, 1)).mean()
+    avg = diff.mean()
+    acc0 = float(((g == 0) & (c != 0)).sum() == 0)
+    edges = gauss_bin_edges(gauss_sigma, n_gauss_side)
+    idx = np.searchsorted(edges, diff.astype(np.float64), side="right")
+    hist = np.bincount(idx[diff != 0], minlength=len(edges) + 1)
+    mass = gauss_bin_mass(gauss_sigma, n_gauss_side)
+    gauss_ok = float(np.all(hist <= mass * n))
+    return np.array([100 * mae / out_range, 100 * wce / out_range, 100 * er,
+                     100 * mre, 100 * abs(avg) / out_range, acc0, gauss_ok],
+                    dtype=np.float32)

@@ -1,0 +1,43 @@
+"""CGP point mutation (paper Sec. III).
+
+Standard per-gene point mutation: every gene independently mutates with
+probability ``rate`` (expected h = rate · n_genes mutated genes per
+offspring).  Fan-in genes resample uniformly from the node's legal
+feed-forward range, function genes from Γ, output genes from all wires — so
+every offspring is legal by construction (property-tested).  The redundant
+CGP encoding makes many mutations neutral, which the (1+λ) selection exploits
+(offspring with *equal* fitness replace the parent).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.genome import CGPSpec, Genome, max_fanin_index
+
+
+def mutate(key: jax.Array, genome: Genome, spec: CGPSpec,
+           rate: float = 0.05) -> Genome:
+    k_sel_n, k_sel_o, k_in0, k_in1, k_fn, k_out = jax.random.split(key, 6)
+
+    hi = jnp.asarray(max_fanin_index(spec))  # (n_n,)
+    new_in0 = jax.random.randint(k_in0, (spec.n_n,), 0, hi)
+    new_in1 = jax.random.randint(k_in1, (spec.n_n,), 0, hi)
+    new_fn = jax.random.randint(k_fn, (spec.n_n,), 0, spec.n_funcs)
+    new_nodes = jnp.stack([new_in0, new_in1, new_fn], axis=-1).astype(jnp.int32)
+
+    mut_n = jax.random.bernoulli(k_sel_n, rate, (spec.n_n, 3))
+    nodes = jnp.where(mut_n, new_nodes, genome.nodes)
+
+    new_outs = jax.random.randint(k_out, (spec.n_o,), 0, spec.n_wires,
+                                  dtype=jnp.int32)
+    mut_o = jax.random.bernoulli(k_sel_o, rate, (spec.n_o,))
+    outs = jnp.where(mut_o, new_outs, genome.outs)
+    return Genome(nodes, outs)
+
+
+def mutate_population(key: jax.Array, parent: Genome, spec: CGPSpec,
+                      lam: int, rate: float = 0.05) -> Genome:
+    """λ offspring of one parent (leading axis lam)."""
+    keys = jax.random.split(key, lam)
+    return jax.vmap(lambda k: mutate(k, parent, spec, rate))(keys)

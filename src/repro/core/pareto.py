@@ -1,0 +1,52 @@
+"""Pareto-front utilities for the trade-off analyses (paper Figs. 7-14)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pareto_front(points: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows (all objectives minimized).
+
+    Args:
+      points: (N, K) array; NaN/inf rows are never selected.
+    """
+    pts = np.asarray(points, dtype=np.float64)
+    n = pts.shape[0]
+    ok = np.isfinite(pts).all(axis=1)
+    mask = np.zeros(n, dtype=bool)
+    order = np.argsort(pts[:, 0], kind="stable")
+    for i in order:
+        if not ok[i]:
+            continue
+        dominated = False
+        for j in np.flatnonzero(mask):
+            if (pts[j] <= pts[i]).all() and (pts[j] < pts[i]).any():
+                dominated = True
+                break
+        if not dominated:
+            # remove points the new one dominates
+            for j in np.flatnonzero(mask):
+                if (pts[i] <= pts[j]).all() and (pts[i] < pts[j]).any():
+                    mask[j] = False
+            mask[i] = True
+    return mask
+
+
+def pareto_points(points: np.ndarray) -> np.ndarray:
+    """Sorted (by first column) non-dominated subset."""
+    m = pareto_front(points)
+    sel = np.asarray(points)[m]
+    return sel[np.argsort(sel[:, 0])]
+
+
+def hypervolume_2d(points: np.ndarray, ref: tuple[float, float]) -> float:
+    """2-D hypervolume (both objectives minimized) w.r.t. reference point."""
+    front = pareto_points(points)
+    front = front[(front[:, 0] <= ref[0]) & (front[:, 1] <= ref[1])]
+    if front.size == 0:
+        return 0.0
+    hv, prev_y = 0.0, ref[1]
+    for x, y in front:
+        hv += (ref[0] - x) * (prev_y - y)
+        prev_y = y
+    return float(hv)

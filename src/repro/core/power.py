@@ -1,0 +1,72 @@
+"""Activity-based power / area / delay model (DESIGN.md §2).
+
+Replaces the paper's yosys + FreePDK45 synthesis step with an analytic model
+computable on-device from the same exhaustive simulation the error metrics use:
+
+    P_dyn(C)  = Σ_{g active}  2·p_g·(1-p_g) · E_sw(type(g)) · f_clk
+    P_leak(C) = Σ_{g active}  I_leak(type(g))
+    power(C)  = P_dyn + P_leak        (f_clk fixed; constants in gates.py)
+
+``p_g`` is the *exact* signal probability of gate g's output under uniform
+inputs, obtained by popcounting the simulated bit-plane — uniform-input
+switching activity is the standard vectorless power-estimation model and uses
+exactly the information the paper's exhaustive evaluation produces.  Only the
+ratio power(C)/power(G) ("relative power") is reported, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gates
+from repro.core.genome import CGPSpec, Genome, active_mask, critical_path_ps
+from repro.core.simulate import signal_probabilities
+
+F_CLK_GHZ = 1.0  # fixed clock for the dynamic term; cancels in relative power
+
+
+class CircuitCost(NamedTuple):
+    power: jax.Array      # arbitrary units (fJ·GHz + nW)
+    area: jax.Array       # um^2
+    delay: jax.Array      # ps (critical path over active gates)
+    n_active: jax.Array   # active gate count
+
+
+def circuit_cost(genome: Genome, spec: CGPSpec, wires: jax.Array,
+                 n_bits: int) -> CircuitCost:
+    """Cost of a candidate from its simulated wire planes.
+
+    Args:
+      wires: (n_wires, W) packed simulation (``simulate.simulate_planes``).
+      n_bits: valid bits in the planes (cube-slice size).  When the input
+        cube is sharded, signal probabilities must be psum-averaged first —
+        see ``evolve._eval_candidate`` which passes globally combined p.
+    """
+    p = signal_probabilities(wires[spec.n_i:], n_bits)  # (n_n,)
+    return circuit_cost_from_probs(genome, spec, p)
+
+
+def circuit_cost_from_probs(genome: Genome, spec: CGPSpec,
+                            p: jax.Array,
+                            with_delay: bool = True) -> CircuitCost:
+    """``with_delay=False`` skips the sequential critical-path scan — the
+    Eq. (8) fitness only uses power, and the 400-step delay scan was ~30% of
+    the evolve hot loop (EXPERIMENTS.md §Perf hillclimb C1); final
+    characterization always computes it."""
+    func = genome.nodes[:, 2]
+    act = active_mask(genome, spec)[spec.n_i:].astype(jnp.float32)
+    e_sw = jnp.asarray(gates.SWITCH_ENERGY_FJ)[func]
+    leak = jnp.asarray(gates.LEAKAGE_NW)[func]
+    area = jnp.asarray(gates.AREA_UM2)[func]
+    activity = 2.0 * p * (1.0 - p)
+    p_dyn = (act * activity * e_sw).sum() * F_CLK_GHZ
+    p_leak = (act * leak).sum() * 1e-3  # scale leakage below dynamic, as at 45nm
+    return CircuitCost(
+        power=p_dyn + p_leak,
+        area=(act * area).sum(),
+        delay=(critical_path_ps(genome, spec) if with_delay
+               else jnp.float32(0.0)),
+        n_active=act.sum().astype(jnp.int32),
+    )

@@ -1,0 +1,111 @@
+"""High-level search API: one call = one paper-style approximation run.
+
+``run_search`` is the programmatic entry point used by the examples and the
+benchmark harness; ``run_sweep`` executes a grid of constraint configurations
+(the paper's experimental methodology, Sec. IV) and returns all evolved
+circuits with their final measurements, ready for Pareto analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import golden as G
+from repro.core import metrics as M
+from repro.core import simulate
+from repro.core.evolve import EvolveConfig, EvolveResult, evolve
+from repro.core.fitness import ConstraintSpec
+from repro.core.genome import CGPSpec, Genome
+from repro.core.power import circuit_cost_from_probs
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    width: int = 8               # operand bit width (paper: 8x8 multiplier)
+    kind: str = "mul"            # "mul" | "add"
+    n_n: int = 400               # CGP nodes (paper: 400)
+    evolve: EvolveConfig = EvolveConfig()
+
+
+@dataclasses.dataclass
+class CircuitRecord:
+    """One evolved circuit with its full characterization."""
+    genome_nodes: np.ndarray
+    genome_outs: np.ndarray
+    metrics: np.ndarray          # (N_METRICS,) final metric vector
+    power_rel: float             # power(C)/power(G)
+    constraint: str              # human-readable constraint description
+    seed: int
+    feasible: bool
+    error_mean: float = 0.0      # signed error mean (Fig. 13 analyses)
+    error_std: float = 0.0
+
+
+def problem_arrays(cfg: SearchConfig):
+    """(golden genome, spec, in_planes, golden values, golden power)."""
+    build = G.array_multiplier if cfg.kind == "mul" else G.ripple_carry_adder
+    gold, spec = build(cfg.width, n_n=cfg.n_n)
+    in_planes = simulate.input_planes(spec.n_i)
+    gvals = jnp.asarray(G.golden_values(cfg.width, cfg.kind))
+    wires = simulate.simulate_planes(gold, spec, in_planes)
+    probs = simulate.signal_probabilities(wires[spec.n_i:],
+                                          spec.n_inputs_total)
+    gpower = circuit_cost_from_probs(gold, spec, probs).power
+    return gold, spec, in_planes, gvals, gpower
+
+
+def run_search(cfg: SearchConfig, constraint: ConstraintSpec,
+               seed: int = 0) -> tuple[CircuitRecord, EvolveResult]:
+    """One (1+λ) run under one combined constraint (paper Eq. 8/9)."""
+    gold, spec, in_planes, gvals, gpower = problem_arrays(cfg)
+    ecfg = dataclasses.replace(cfg.evolve,
+                               gauss_sigma=constraint.gauss_sigma,
+                               seed=seed)
+    thr = jnp.asarray(constraint.thresholds())
+    res = evolve(spec, ecfg, gold, thr, in_planes, gvals, gpower,
+                 jax.random.PRNGKey(seed))
+    rec = characterize(res.parent, spec, cfg, constraint, seed,
+                       in_planes, gvals, gpower)
+    return rec, res
+
+
+def characterize(genome: Genome, spec: CGPSpec, cfg: SearchConfig,
+                 constraint: ConstraintSpec, seed: int,
+                 in_planes, gvals, gpower) -> CircuitRecord:
+    """Full final measurement of an evolved circuit."""
+    wires = simulate.simulate_planes(genome, spec, in_planes)
+    cvals = simulate.unpack_values(wires[genome.outs])
+    met = M.metrics_from_values(gvals, cvals, spec.n_o,
+                                constraint.gauss_sigma)
+    probs = simulate.signal_probabilities(wires[spec.n_i:],
+                                          spec.n_inputs_total)
+    cost = circuit_cost_from_probs(genome, spec, probs)
+    emean, estd = M.error_moments(gvals, cvals)
+    from repro.core.fitness import feasible as feas_fn
+    feas = feas_fn(met, jnp.asarray(constraint.thresholds()))
+    return CircuitRecord(
+        genome_nodes=np.asarray(genome.nodes),
+        genome_outs=np.asarray(genome.outs),
+        metrics=np.asarray(met),
+        power_rel=float(cost.power / gpower),
+        constraint=constraint.describe(),
+        seed=seed,
+        feasible=bool(feas),
+        error_mean=float(emean),
+        error_std=float(estd),
+    )
+
+
+def run_sweep(cfg: SearchConfig, constraints: Sequence[ConstraintSpec],
+              seeds: Sequence[int] = (0,)) -> list[CircuitRecord]:
+    """Grid of constraint configs × seeds (paper Sec. IV methodology)."""
+    records = []
+    for con in constraints:
+        for seed in seeds:
+            rec, _ = run_search(cfg, con, seed)
+            records.append(rec)
+    return records

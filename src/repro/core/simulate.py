@@ -1,0 +1,147 @@
+"""Bit-packed exhaustive circuit simulation (paper Sec. IV).
+
+The paper evaluates every candidate on all 2^n input combinations using 64-bit
+bitwise vectorization on Xeon cores.  The TPU-native formulation packs the
+input cube into int32 *lanes* (the VPU's native word): wire ``w``'s value over
+the whole cube is a bit-plane of ``2^n_i`` bits stored as ``(n_words,)`` int32.
+Simulation walks the node array once, doing W-wide branch-free truth-table
+merges — this module is the pure-jnp reference path; ``repro.kernels.cgp_sim``
+is the fused Pallas kernel with the same semantics (tested allclose).
+
+Input-space sharding: every function below takes the *word slice* to simulate,
+so a mesh axis can split the cube (each shard passes its own ``input_planes``
+slice and psums the metric partials — see ``core.evolve``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gates
+from repro.core.genome import CGPSpec, Genome
+
+I32 = jnp.int32
+
+
+@functools.lru_cache(maxsize=32)
+def input_planes_np(n_i: int) -> np.ndarray:
+    """(n_i, n_words) int32 bit-planes of the exhaustive input cube.
+
+    Bit ``l`` of word ``w`` in plane ``i`` is bit ``i`` of the input index
+    ``x = 32*w + l``.  Cubes smaller than one word are tiled to 32 lanes —
+    all normalized metrics and signal probabilities are invariant under
+    whole-cube replication, so packing stays exact for tiny test circuits.
+    """
+    n = 1 << n_i
+    xs = np.arange(max(n, 32), dtype=np.uint64) % np.uint64(n)
+    planes = []
+    for i in range(n_i):
+        bits = ((xs >> np.uint64(i)) & np.uint64(1)).astype(np.uint32)
+        words = bits.reshape(-1, 32)
+        packed = (words << np.arange(32, dtype=np.uint32)[None, :]).sum(
+            axis=1, dtype=np.uint32)
+        planes.append(packed)
+    return np.stack(planes).astype(np.int32)  # two's complement reinterpret
+
+
+def input_planes(n_i: int) -> jax.Array:
+    return jnp.asarray(input_planes_np(n_i))
+
+
+def gate_eval(func: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Branch-free packed gate evaluation via 4-term truth-table merge."""
+    tt = jnp.asarray(gates.TRUTH_TABLES)[func]
+    na, nb = ~a, ~b
+    m0, m1, m2, m3 = na & nb, a & nb, na & b, a & b
+    s = lambda k: -((tt >> k) & 1)  # 0 or -1 mask
+    return (m0 & s(0)) | (m1 & s(1)) | (m2 & s(2)) | (m3 & s(3))
+
+
+def simulate_planes(genome: Genome, spec: CGPSpec,
+                    in_planes: jax.Array) -> jax.Array:
+    """Simulate all wires over a (possibly sharded) slice of the input cube.
+
+    Args:
+      in_planes: (n_i, W) int32 input bit-planes (W words of the cube slice).
+    Returns:
+      (n_wires, W) int32 — every wire's bit-plane (inputs first, then nodes).
+    """
+    n_i, n_n = spec.n_i, spec.n_n
+    W = in_planes.shape[-1]
+    wires0 = jnp.zeros((spec.n_wires, W), dtype=I32).at[:n_i].set(in_planes)
+
+    def step(wires, k):
+        node = genome.nodes[k]
+        a = wires[node[0]]
+        b = wires[node[1]]
+        out = gate_eval(node[2], a, b)
+        return wires.at[n_i + k].set(out), None
+
+    wires, _ = jax.lax.scan(step, wires0, jnp.arange(n_n))
+    return wires
+
+
+def output_planes(genome: Genome, spec: CGPSpec,
+                  in_planes: jax.Array) -> jax.Array:
+    """(n_o, W) packed primary-output planes."""
+    wires = simulate_planes(genome, spec, in_planes)
+    return wires[genome.outs]
+
+
+def unpack_values(out_planes: jax.Array) -> jax.Array:
+    """Decode packed output planes to per-input integers.
+
+    Args:
+      out_planes: (n_o, W) int32.
+    Returns:
+      (W*32,) int32 — int(f(x)) for every input x in this cube slice.
+    """
+    n_o, W = out_planes.shape
+    lanes = jnp.arange(32, dtype=I32)
+    # (n_o, W, 32) bits
+    bits = (out_planes[:, :, None] >> lanes[None, None, :]) & 1
+    weights = (jnp.int32(1) << jnp.arange(n_o, dtype=I32))  # n_o < 31 assumed
+    vals = jnp.tensordot(weights, bits, axes=[[0], [0]])
+    return vals.reshape(-1)
+
+
+def simulate_values(genome: Genome, spec: CGPSpec,
+                    in_planes: jax.Array | None = None) -> jax.Array:
+    """int(f_C(x)) over the input cube slice (default: full cube)."""
+    if in_planes is None:
+        in_planes = input_planes(spec.n_i)
+    return unpack_values(output_planes(genome, spec, in_planes))
+
+
+def signal_probabilities(wires: jax.Array, n_bits: int) -> jax.Array:
+    """Exact P(wire = 1) under uniform inputs, from popcounts of bit-planes.
+
+    Args:
+      wires: (n_wires, W) packed planes.
+      n_bits: number of valid bits (= cube-slice size, normally W*32).
+    """
+    pop = jax.lax.population_count(wires.view(jnp.uint32)).astype(jnp.float32)
+    return pop.sum(axis=-1) / float(n_bits)
+
+
+def simulate_values_np(genome: Genome, spec: CGPSpec) -> np.ndarray:
+    """Pure-NumPy gate-by-gate oracle (slow; tests only)."""
+    nodes = np.asarray(genome.nodes)
+    outs = np.asarray(genome.outs)
+    n = 1 << spec.n_i
+    xs = np.arange(n, dtype=np.int64)
+    wires = np.zeros((spec.n_wires, n), dtype=np.int64)
+    for i in range(spec.n_i):
+        wires[i] = (xs >> i) & 1
+    tt = gates.TRUTH_TABLES
+    for k in range(spec.n_n):
+        a, b, f = nodes[k]
+        idx = wires[a] + 2 * wires[b]
+        wires[spec.n_i + k] = (tt[f] >> idx) & 1
+    vals = np.zeros(n, dtype=np.int64)
+    for o in range(spec.n_o):
+        vals += wires[outs[o]] << o
+    return vals.astype(np.int32)

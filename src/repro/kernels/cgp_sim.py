@@ -1,0 +1,178 @@
+"""Fused CGP simulation + error-metric Pallas kernel (DESIGN.md §2).
+
+THE paper hot loop: exhaustive bit-parallel candidate evaluation.  The TPU
+formulation keeps the whole wire plane for a block of the input cube in VMEM
+scratch and walks the netlist once with branch-free truth-table merges; the
+same pass unpacks integer outputs and accumulates every error-metric partial
+(Eq. 1-7 numerators) plus per-gate popcounts (for the activity power model) —
+so a candidate costs exactly one HBM read of its input-plane block and O(10)
+scalars of HBM write-back.
+
+Grid: one program per input-cube block; outputs use the standard Pallas
+revisiting-accumulator pattern (all blocks map to output block 0, initialized
+at program 0).  Population parallelism comes from ``jax.vmap`` over genomes
+(ops.py), which becomes an extra grid dimension.
+
+VMEM budget at the paper scale (8x8 multiplier, block=512 words):
+  wires scratch (416, 512) int32 ≈ 0.85 MB; in-planes block 32 KB;
+  golden block 64 KB — comfortably inside the ~16 MB/core budget, and the
+  block shape keeps the lane dimension at 512 (mod-128 aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import gates
+
+# sums vector layout (float32): exact split accumulation, see core.metrics
+ABS_HI, ABS_LO, ERR_CNT, REL_SUM, POS_HI, POS_LO, NEG_HI, NEG_LO, \
+    ACC0_BAD, COUNT = range(10)
+N_SUMS = 10
+
+
+def _gate_eval(func: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Branch-free packed gate eval via the packed truth-table scalar."""
+    tt = jax.lax.shift_right_logical(
+        jnp.uint32(gates.TT_PACKED), (4 * func).astype(jnp.uint32))
+    tt = (tt & jnp.uint32(0xF)).astype(jnp.int32)
+    na, nb = ~a, ~b
+    m0, m1, m2, m3 = na & nb, a & nb, na & b, a & b
+    s = lambda k: -((tt >> k) & 1)
+    return (m0 & s(0)) | (m1 & s(1)) | (m2 & s(2)) | (m3 & s(3))
+
+
+def _split_sum(v: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Exact block sums of byte-split magnitudes (see core.metrics)."""
+    hi = (v >> 8).astype(jnp.float32).sum()
+    lo = (v & 0xFF).astype(jnp.float32).sum()
+    return hi, lo
+
+
+def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
+                   sums_ref, wce_ref, hist_ref, pops_ref, wires,
+                   *, n_i: int, n_n: int, n_o: int,
+                   gauss_sigma: float, n_gauss_side: int, n_bins: int):
+    blk = pl.program_id(0)
+
+    @pl.when(blk == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        wce_ref[...] = jnp.zeros_like(wce_ref)
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        pops_ref[...] = jnp.zeros_like(pops_ref)
+
+    bw = planes_ref.shape[1]
+
+    # --- phase 1: netlist walk over the VMEM wire plane -------------------
+    wires[0:n_i, :] = planes_ref[...]
+
+    def node_step(k, _):
+        node = pl.load(nodes_ref, (k, slice(None)))  # (3,) int32
+        a = pl.load(wires, (node[0], slice(None)))
+        b = pl.load(wires, (node[1], slice(None)))
+        out = _gate_eval(node[2], a, b)
+        pl.store(wires, (n_i + k, slice(None)), out)
+        return 0
+
+    jax.lax.fori_loop(0, n_n, node_step, 0)
+
+    # per-gate popcounts for the activity power model
+    gate_planes = wires[n_i:n_i + n_n, :]
+    pops = jax.lax.population_count(
+        gate_planes.view(jnp.uint32)).astype(jnp.float32).sum(axis=1)
+    pops_ref[...] += pops
+
+    # --- phase 2: unpack outputs, fuse metric partials ---------------------
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (bw, 32), 1)
+    vals = jnp.zeros((bw, 32), jnp.int32)
+    for o in range(n_o):  # static unroll: n_o is small (<= 2*width)
+        plane = pl.load(wires, (outs_ref[o], slice(None)))  # (bw,)
+        bits = (plane[:, None] >> lanes) & 1
+        vals += bits << o
+
+    g = golden_ref[...].reshape(bw, 32)
+    diff = g - vals
+    ad = jnp.abs(diff)
+    nz = diff != 0
+
+    abs_hi, abs_lo = _split_sum(ad)
+    pos_hi, pos_lo = _split_sum(jnp.maximum(diff, 0))
+    neg_hi, neg_lo = _split_sum(jnp.maximum(-diff, 0))
+    upd = jnp.zeros((N_SUMS,), jnp.float32)
+    upd = upd.at[ABS_HI].set(abs_hi).at[ABS_LO].set(abs_lo)
+    upd = upd.at[POS_HI].set(pos_hi).at[POS_LO].set(pos_lo)
+    upd = upd.at[NEG_HI].set(neg_hi).at[NEG_LO].set(neg_lo)
+    upd = upd.at[ERR_CNT].set(nz.astype(jnp.float32).sum())
+    upd = upd.at[REL_SUM].set(
+        (ad.astype(jnp.float32) / jnp.maximum(g, 1).astype(jnp.float32)).sum())
+    upd = upd.at[ACC0_BAD].set(
+        ((g == 0) & (vals != 0)).astype(jnp.float32).sum())
+    upd = upd.at[COUNT].set(float(32) * bw)
+    sums_ref[...] += upd
+
+    wce_ref[0] = jnp.maximum(wce_ref[0], ad.max())
+
+    # σ-wide histogram bins over ±n_side·σ (+2 tails); scatter-free: static
+    # per-bin masked reductions (TPU-friendly, n_bins ~ 10)
+    e0 = -float(n_gauss_side) * gauss_sigma
+    idx = jnp.clip(
+        jnp.floor((diff.astype(jnp.float32) - e0) / gauss_sigma).astype(jnp.int32) + 1,
+        0, n_bins - 1)
+    nzf = nz.astype(jnp.float32)
+    hist_upd = jnp.zeros((n_bins,), jnp.float32)
+    for b in range(n_bins):  # static unroll
+        hist_upd = hist_upd.at[b].set(((idx == b) & nz).astype(jnp.float32).sum())
+    hist_ref[...] += hist_upd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_i", "n_n", "n_o", "gauss_sigma", "n_gauss_side",
+                     "block_words", "interpret"))
+def cgp_sim_metrics(nodes: jax.Array, outs: jax.Array, in_planes: jax.Array,
+                    golden_vals: jax.Array, *, n_i: int, n_n: int, n_o: int,
+                    gauss_sigma: float = 256.0, n_gauss_side: int = 4,
+                    block_words: int = 512, interpret: bool = True):
+    """pallas_call wrapper.  Returns (sums(10,), wce(1,), hist, pops(n_n,)).
+
+    in_planes: (n_i, W) int32; golden_vals: (W*32,) int32.
+    """
+    W = in_planes.shape[1]
+    bw = min(block_words, W)
+    assert W % bw == 0, (W, bw)
+    n_bins = 2 * n_gauss_side + 2
+    n_wires = n_i + n_n
+
+    kernel = functools.partial(
+        cgp_sim_kernel, n_i=n_i, n_n=n_n, n_o=n_o, gauss_sigma=gauss_sigma,
+        n_gauss_side=n_gauss_side, n_bins=n_bins)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((N_SUMS,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+        jax.ShapeDtypeStruct((n_n,), jnp.float32),
+    )
+    grid = (W // bw,)
+    acc_spec = lambda shape: pl.BlockSpec(shape, lambda w: (0,) * len(shape))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_n, 3), lambda w: (0, 0)),       # nodes (VMEM)
+            pl.BlockSpec((n_o,), lambda w: (0,)),           # outs
+            pl.BlockSpec((n_i, bw), lambda w: (0, w)),      # input planes blk
+            pl.BlockSpec((bw * 32,), lambda w: (w,)),       # golden values blk
+        ],
+        out_specs=(acc_spec((N_SUMS,)), acc_spec((1,)), acc_spec((n_bins,)),
+                   acc_spec((n_n,))),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((n_wires, bw), jnp.int32)],
+        interpret=interpret,
+    )(nodes, outs, in_planes, golden_vals)

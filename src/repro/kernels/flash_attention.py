@@ -1,0 +1,99 @@
+"""Blocked online-softmax attention (forward) Pallas kernel.
+
+Used by the serving path at long context (prefill_32k) where materializing
+S×S logits is impossible; the pure-jnp blocked implementation
+(models/attention.py) is the differentiable/compile-anywhere path and this
+kernel is the TPU hot path.  Supports causal masking and GQA (the q-head →
+kv-head mapping happens in ops.py by reshaping to per-group batches).
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks); running max/denominator and
+the f32 accumulator tile live in VMEM scratch, revisited across the kv grid
+dimension (standard flash pattern).  Block sizes default to MXU-aligned 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_i, l_i,
+                           *, scale: float, causal: bool,
+                           bq: int, bkv: int, n_kv: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32) * scale       # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)               # (BKV, D)
+        v = v_ref[0].astype(jnp.float32)               # (BKV, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (BQ, BKV)
+        if causal:
+            q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+            k_pos = kb * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_i[...], s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i[...] - m_new)
+        l_i[...] = l_i[...] * alpha + p.sum(axis=1)
+        acc[...] = acc[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_i[...] = m_new
+
+    if causal:
+        # skip fully-masked kv blocks (they are still visited by the grid;
+        # the predicate saves the FLOPs/VMEM traffic)
+        pl.when(kb * bkv <= qb * bq + bq - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(kb == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_i[...], 1e-30)
+        o_ref[0] = (acc[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True, bq: int = 128, bkv: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BH, Skv, D) — heads pre-folded into batch."""
+    BH, Sq, D = q.shape
+    _, Skv, _ = k.shape
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+    n_kv = Skv // bkv
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(flash_attention_kernel, scale=scale,
+                               causal=causal, bq=bq, bkv=bkv, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

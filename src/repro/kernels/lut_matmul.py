@@ -1,0 +1,74 @@
+"""Approximate-multiplier LUT matmul Pallas kernel (deployment bridge).
+
+On silicon the evolved CGP circuit *is* the multiplier inside a MAC array
+(paper ref. [4]: approximate multipliers for neural networks — the use case
+that motivates the ACC0 metric).  On TPU we cannot swap the MXU's multiplier,
+so this kernel *emulates* the evolved circuit exactly: every elementwise
+product in an int8×int8 matmul is looked up in the circuit's 256×256 product
+table, which lives in VMEM (256 KB) for the whole kernel.
+
+    C[m, n] = Σ_k LUT[A[m, k], B[k, n]]      (uint8 operands, int32 accum)
+
+This kernel exists for *emulation fidelity* (model-accuracy studies of
+approximate arithmetic), not for speed — a gather per MAC can never beat the
+MXU.  That trade-off is stated in DESIGN.md/EXPERIMENTS.md wherever it is
+used; the exact-LUT case is cross-checked against a real int8 matmul.
+
+Tiling: grid (M/BM, N/BN, K/BK); A/B blocks stream through VMEM; the int32
+accumulator tile is a revisited output block over the K grid dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def lut_matmul_kernel(a_ref, b_ref, lut_ref, c_ref, *, bk: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    a = a_ref[...].astype(jnp.int32)   # (BM, BK) in [0, 255]
+    b = b_ref[...].astype(jnp.int32)   # (BK, BN)
+    lut_flat = lut_ref[...].reshape(-1)  # (65536,) int32 in VMEM
+
+    def body(kk, acc):
+        idx = a[:, kk][:, None] * 256 + b[kk, :][None, :]   # (BM, BN)
+        return acc + jnp.take(lut_flat, idx, axis=0)
+
+    acc = jax.lax.fori_loop(0, bk, body, jnp.zeros_like(c_ref))
+    c_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
+               *, bm: int = 128, bn: int = 128, bk: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """C = LUT-matmul(A, B).  A: (M, K) uint8/int32, B: (K, N), LUT: (256,256).
+
+    Shapes must tile evenly (ops.py pads otherwise).
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+
+    kernel = functools.partial(lut_matmul_kernel, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((256, 256), lambda m, n, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(a.astype(jnp.int32), b.astype(jnp.int32), lut.astype(jnp.int32))

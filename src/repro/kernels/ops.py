@@ -1,0 +1,90 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU and are validated against ref.py in interpret mode, per
+the task brief).  On a TPU backend the wrappers run compiled Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.core.genome import CGPSpec, Genome
+from repro.kernels import cgp_sim as _cgp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lut_matmul as _lut
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cgp_eval(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
+             golden_vals: jax.Array, gauss_sigma: float = 256.0,
+             block_words: int = 512, interpret: bool | None = None
+             ) -> tuple[M.MetricPartials, jax.Array]:
+    """Fused candidate evaluation -> (MetricPartials, per-gate popcounts).
+
+    Drop-in for ref.cgp_eval_ref; used by core.evolve backend="pallas".
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    sums, wce, hist, pops = _cgp.cgp_sim_metrics(
+        genome.nodes, genome.outs, in_planes, golden_vals,
+        n_i=spec.n_i, n_n=spec.n_n, n_o=spec.n_o,
+        gauss_sigma=gauss_sigma, block_words=block_words,
+        interpret=interpret)
+    C = _cgp
+    partials = M.MetricPartials(
+        abs_sum=256.0 * sums[C.ABS_HI] + sums[C.ABS_LO],
+        wce_max=wce[0],
+        err_count=sums[C.ERR_CNT].astype(jnp.int32),
+        rel_sum=sums[C.REL_SUM],
+        sgn_sum=(256.0 * sums[C.POS_HI] + sums[C.POS_LO])
+                - (256.0 * sums[C.NEG_HI] + sums[C.NEG_LO]),
+        acc0_bad=sums[C.ACC0_BAD].astype(jnp.int32),
+        hist=hist.astype(jnp.int32),
+        count=sums[C.COUNT].astype(jnp.int32),
+    )
+    return partials, pops
+
+
+def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
+               interpret: bool | None = None, **tiles) -> jax.Array:
+    """Approximate-multiplier emulated matmul (pads to tile multiples)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    M_, K = a.shape
+    _, N = b.shape
+    bm = min(tiles.get("bm", 128), max(8, M_))
+    bn = min(tiles.get("bn", 128), max(8, N))
+    bk = min(tiles.get("bk", 128), max(8, K))
+    pm, pn, pk = (-M_) % bm, (-N) % bn, (-K) % bk
+    a_p = jnp.pad(a, ((0, pm), (0, pk)))
+    b_p = jnp.pad(b, ((0, pk), (0, pn)))
+    out = _lut.lut_matmul(a_p, b_p, lut, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+    return out[:M_, :N]
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, interpret: bool | None = None,
+                    bq: int = 128, bkv: int = 128) -> jax.Array:
+    """Blocked attention; q (B, Hq, S, D), k/v (B, Hkv, S, D); GQA folded.
+
+    Heads are grouped: q-heads h use kv-head h // (Hq // Hkv).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = jnp.repeat(k, group, axis=1).reshape(B * Hq, Skv, D)
+    vf = jnp.repeat(v, group, axis=1).reshape(B * Hq, Skv, D)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal,
+                              bq=bq, bkv=bkv, interpret=interpret)
+    return out.reshape(B, Hq, Sq, D)

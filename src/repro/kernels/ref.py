@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as M
+from repro.core import simulate
+from repro.core.genome import CGPSpec, Genome
+
+
+def cgp_eval_ref(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
+                 golden_vals: jax.Array, gauss_sigma: float
+                 ) -> tuple[M.MetricPartials, jax.Array]:
+    """Oracle for kernels.cgp_sim: (metric partials, per-gate popcounts)."""
+    wires = simulate.simulate_planes(genome, spec, in_planes)
+    cand_vals = simulate.unpack_values(wires[genome.outs])
+    partials = M.error_partials(golden_vals, cand_vals, gauss_sigma)
+    pops = jax.lax.population_count(
+        wires[spec.n_i:].view(jnp.uint32)).astype(jnp.float32).sum(axis=-1)
+    return partials, pops
+
+
+def lut_matmul_ref(a: jax.Array, b: jax.Array, lut: jax.Array) -> jax.Array:
+    """C[m,n] = Σ_k LUT[a[m,k], b[k,n]] — direct take-based oracle."""
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    idx = a[:, :, None] * 256 + b[None, :, :]          # (M, K, N)
+    prods = jnp.take(lut.reshape(-1).astype(jnp.int32), idx, axis=0)
+    return prods.sum(axis=1)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """Naive softmax attention oracle. q: (BH, Sq, D), k/v: (BH, Skv, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    if causal:
+        Sq, Skv = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  Set ONLY here — tests/benchmarks must see the real single device.
+
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell on the production mesh and record memory/cost/collective evidence.
+
+For every cell this lowers the SAME step functions the launchers run
+(launch/steps.py): train_4k -> train_step (grads + optimizer), prefill_32k ->
+prefill, decode_32k/long_500k -> decode_step.  ``.lower().compile()``
+succeeding proves the sharding config is coherent; the JSON output feeds
+launch/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  python -m repro.launch.dryrun --cgp --mesh multi     # the paper's workload
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as B
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import param_specs as model_param_specs
+from repro.optim import OptConfig, opt_state_specs
+from repro.parallel import ctx
+
+# opcode must be immediately followed by '(' — otherwise operand NAMES like
+# `copy(%all-gather)` would be counted as collectives (double counting)
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+SHAPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|u32|s8|u8|s16|u16|pred|s64|u64)"
+                      r"\[([0-9,]*)\]")
+DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "s16": 2, "u16": 2, "pred": 1, "s64": 8,
+               "u64": 8}
+
+
+def parse_collective_bytes(hlo: str, loop_trip_counts: dict[str, int]
+                           ) -> dict:
+    """Sum output bytes of every collective op in the (post-SPMD) HLO.
+
+    Ops inside `while` bodies are multiplied by the known layer-scan trip
+    count (``loop_trip_counts['default']``); the computation→while nesting is
+    detected from the fusion/computation names (documented calibration — see
+    EXPERIMENTS.md §Roofline).
+    """
+    per_op: dict[str, float] = {}
+    total = 0.0
+    current_comp = ""
+    body_mult = 1.0
+    for line in hlo.splitlines():
+        line_s = line.strip()
+        if line_s.startswith(("%", "ENTRY")) and "{" in line_s and "=" not in line_s.split("{")[0]:
+            current_comp = line_s.split(" ")[0].lstrip("%")
+            body_mult = (loop_trip_counts.get("default", 1)
+                         if ("while" in current_comp or
+                             "body" in current_comp or
+                             "scan" in current_comp) else 1.0)
+            continue
+        m = COLLECTIVE_RE.search(line_s)
+        if not m or "=" not in line_s:
+            continue
+        if m.group(2) == "-done":
+            continue  # async pair: count the -start only
+        # bytes of the op RESULT: shape(s) between '=' and the opcode
+        eq = line_s.index("=")
+        shapes = SHAPE_RE.findall(line_s[eq:m.start()])
+        nbytes = 0.0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        kind = m.group(1)
+        per_op[kind] = per_op.get(kind, 0.0) + nbytes * body_mult
+        total += nbytes * body_mult
+    return {"total_bytes": total, "per_op": per_op}
+
+
+def build_cell(arch_id: str, shape: B.ShapeConfig):
+    """(step_fn, in_shardings tree, abstract args) for one cell."""
+    mod = B.get_arch(arch_id)
+    cfg: B.ModelConfig = mod.CONFIG
+    opt_cfg = OptConfig(name=getattr(mod, "OPTIMIZER", "adamw"))
+    batch_sds = B.input_specs(cfg, shape)
+    batch_specs = ST.batch_specs(cfg, shape)
+    params_sds = ST.abstract_params(cfg)
+    pspecs = ST.resolve_tree(model_param_specs(cfg))
+    if shape.mode == "train":
+        step = ST.make_train_step(cfg, opt_cfg)
+        opt_sds = ST.abstract_opt_state(cfg, opt_cfg)
+        ospecs = ST.resolve_tree(opt_state_specs(model_param_specs(cfg),
+                                                 opt_cfg))
+        bshard = ST.resolve_tree(batch_specs)
+        args = (params_sds, opt_sds, batch_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        in_sh = (pspecs, ospecs, bshard, None)
+        out_sh = (pspecs, ospecs, None)
+        donate = (0, 1)
+        fn = step
+    elif shape.mode == "prefill":
+        fn = ST.make_prefill_step(cfg)
+        cache_specs = ST.resolve_tree(
+            ST.stacked_cache_specs(cfg, shape.global_batch))
+        args = (params_sds, batch_sds)
+        in_sh = (pspecs, ST.resolve_tree(batch_specs))
+        out_sh = (None, cache_specs)
+        donate = ()
+    else:  # decode
+        seq_shard = shape.global_batch < ctx.axis_size("dp")
+        fn = ST.make_decode_step(cfg, seq_shard=seq_shard)
+        cache_sds = ST.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cache_specs = ST.resolve_tree(
+            ST.stacked_cache_specs(cfg, shape.global_batch))
+        args = (params_sds, cache_sds, batch_sds)
+        in_sh = (pspecs, cache_specs, ST.resolve_tree(batch_specs))
+        out_sh = (None, cache_specs)
+        donate = (1,)
+    return fn, args, in_sh, out_sh, donate, cfg
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None) -> dict:
+    shape = {s.name: s for s in B.ALL_SHAPES}[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "n_devices": mesh.size}
+    try:
+        with ctx.use_mesh(mesh):
+            fn, args, in_sh, out_sh, donate, cfg = build_cell(arch_id, shape)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = {}
+            try:
+                ma = compiled.memory_analysis()
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes"):
+                    mem[k] = int(getattr(ma, k, 0) or 0)
+            except Exception as e:  # backend-dependent
+                mem["error"] = str(e)
+            cost = {}
+            try:
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0]
+                cost = {k: float(v) for k, v in ca.items()
+                        if isinstance(v, (int, float)) and (
+                            "flops" in k or "bytes" in k or
+                            "utilization" not in k)}
+            except Exception as e:
+                cost["error"] = str(e)
+            hlo = compiled.as_text()
+            colls = parse_collective_bytes(
+                hlo, {"default": cfg.n_periods})
+            rec.update({
+                "ok": True, "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory_analysis": mem, "cost_analysis": cost,
+                "collectives": colls,
+                "n_periods": cfg.n_periods,
+                "hlo_bytes": len(hlo),
+            })
+    except Exception as e:
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__{rec['mesh']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_cgp_cell(multi_pod: bool, out_dir: str | None = None) -> dict:
+    """Dry-run the paper's own workload: the distributed CGP evolve step."""
+    import numpy as np
+    from repro.core import golden as G
+    from repro.core import metrics as MM
+    from repro.core.evolve import EvolveConfig, evolve_sharded
+    from repro.core.genome import CGPSpec
+    from repro.core.search import SearchConfig
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": "cgp_mult8", "shape": "evolve_64g",
+           "mesh": "multi" if multi_pod else "single",
+           "n_devices": mesh.size}
+    t0 = time.time()
+    try:
+        gold, spec = G.array_multiplier(8, n_n=400)
+        n_pods = mesh.shape.get("pod", 1)
+        n_islands = mesh.shape["data"] * n_pods
+        n_model = mesh.shape["model"]
+        cfg = EvolveConfig(generations=64, lam=8)
+        thr = jax.ShapeDtypeStruct((n_pods, MM.N_METRICS), jnp.float32)
+        keys = jax.ShapeDtypeStruct((n_islands, 2), jnp.uint32)
+        W = spec.n_words
+        planes = jax.ShapeDtypeStruct((spec.n_i, W), jnp.int32)
+        gvals = jax.ShapeDtypeStruct((W * 32,), jnp.int32)
+        with ctx.use_mesh(mesh):
+            fn = evolve_sharded(
+                mesh, spec, cfg, gold,
+                thresholds_per_pod=thr, golden_power=jnp.float32(100.0),
+                pod_axis="pod" if multi_pod else None)
+            jitted = jax.jit(lambda t, k, p, g: fn(t, k, p, g))
+            lowered = jitted.lower(thr, keys, planes, gvals)
+            compiled = lowered.compile()
+            cost = {}
+            try:
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0]
+                cost = {k: float(v) for k, v in ca.items()
+                        if isinstance(v, (int, float))}
+            except Exception as e:
+                cost["error"] = str(e)
+            mem = {}
+            try:
+                ma = compiled.memory_analysis()
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes"):
+                    mem[k] = int(getattr(ma, k, 0) or 0)
+            except Exception as e:
+                mem["error"] = str(e)
+            hlo = compiled.as_text()
+            rec.update({
+                "ok": True, "compile_s": round(time.time() - t0, 2),
+                "cost_analysis": cost, "memory_analysis": mem,
+                "collectives": parse_collective_bytes(
+                    hlo, {"default": cfg.generations}),
+                "hlo_bytes": len(hlo)})
+    except Exception as e:
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"cgp_mult8__evolve__{rec['mesh']}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cgp", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.cgp:
+        for mp in meshes:
+            rec = run_cgp_cell(mp, args.out)
+            print(json.dumps({k: rec[k] for k in
+                              ("arch", "shape", "mesh", "ok")}),
+                  flush=True)
+        return
+    if args.all:
+        for arch in B.ARCH_IDS:
+            for shape in B.shapes_for(arch):
+                cells.append((arch, shape.name))
+    else:
+        cells.append((args.arch, args.shape))
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out)
+            brief = {k: rec.get(k) for k in
+                     ("arch", "shape", "mesh", "ok", "compile_s", "error")}
+            print(json.dumps(brief), flush=True)
+
+
+if __name__ == "__main__":
+    main()

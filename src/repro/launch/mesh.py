@@ -1,0 +1,31 @@
+"""Production mesh construction (task-brief interface, verbatim semantics).
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.  Single pod: (16, 16) = 256 chips (data, model).  Multi-pod:
+(2, 16, 16) = 512 chips (pod, data, model) — the pod axis carries
+data-parallel replication across pods for LM cells and the
+constraint-configuration sweep for CGP cells (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, pods: int = 0):
+    """Small mesh for tests (requires xla_force_host_platform_device_count)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1×N (data, model) mesh (examples/CI)."""
+    n = jax.device_count()
+    return jax.make_mesh((1, n), ("data", "model"))

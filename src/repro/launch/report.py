@@ -1,0 +1,76 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+recorded JSON/CSV artifacts (re-run after any dryrun/roofline refresh):
+
+    PYTHONPATH=src python -m repro.launch.report > experiments/report.md
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+
+GB = 1e9
+
+
+def dryrun_table(dryrun_dir: str = "experiments/dryrun") -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        d = json.load(open(path))
+        mem = d.get("memory_analysis", {})
+        cost = d.get("cost_analysis", {})
+        colls = d.get("collectives", {})
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "devices": d.get("n_devices", ""),
+            "ok": "✓" if d.get("ok") else "✗",
+            "compile_s": d.get("compile_s", ""),
+            "args_gb": round(mem.get("argument_size_in_bytes", 0) / GB, 2),
+            "temp_gb": round(mem.get("temp_size_in_bytes", 0) / GB, 2),
+            "flops_raw": f"{cost.get('flops', 0):.2e}",
+            "coll_gb": round(colls.get("total_bytes", 0) / GB, 2),
+            "coll_ops": "/".join(sorted(colls.get("per_op", {}))),
+        })
+    hdr = ("| arch | shape | mesh | devs | ok | compile s | args GB/dev | "
+           "temp GB/dev | HLO flops (raw) | coll GB | collective ops |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['devices']} "
+            f"| {r['ok']} | {r['compile_s']} | {r['args_gb']} "
+            f"| {r['temp_gb']} | {r['flops_raw']} | {r['coll_gb']} "
+            f"| {r['coll_ops']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(csv_path: str = "experiments/roofline.csv") -> str:
+    if not os.path.exists(csv_path):
+        return "(roofline.csv not yet generated)"
+    rows = list(csv.DictReader(open(csv_path)))
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS | useful ratio | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if not r.get("compute_s"):
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        f = lambda k: f"{float(r[k]):.4g}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {f('compute_s')} "
+            f"| {f('memory_s')} | {f('collective_s')} | {r['dominant']} "
+            f"| {float(r['model_flops_total']):.3e} "
+            f"| {f('useful_flops_ratio')} | {f('roofline_fraction')} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run matrix\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single-pod, per-chip)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

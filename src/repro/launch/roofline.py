@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ same rule as dryrun.py: first lines, before any jax import.
+
+"""Roofline analysis (task deliverable g).
+
+Per (arch × shape) on the single-pod mesh, derive the three roofline terms:
+
+    compute    = HLO_FLOPs_per_chip   / 197e12  (bf16 peak, v5e)
+    memory     = HLO_bytes_per_chip   / 819e9   (HBM bandwidth)
+    collective = coll_bytes_per_chip  / 50e9    (ICI per-link)
+
+XLA:CPU's HloCostAnalysis counts `while` bodies ONCE, so raw numbers from
+the full-depth compile undercount the layer scan.  We therefore use a
+two-point calibration: compile the same cell at depth p and 2p layer-periods,
+
+    body  = f(2p) - f(p)          (one period's contribution)
+    base  = f(p)  - body          (embed + loss + outside-scan work)
+    total = base + body·n_periods
+
+which is exact for everything inside the (linear) scan.  The same scheme
+corrects the collective-byte parse (raw per-module sums, no name
+heuristics).  MODEL_FLOPS = 6·N(active)·tokens is computed analytically per
+cell; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat recompute + causal-
+attention waste, as required.
+
+Outputs experiments/roofline.csv + a markdown table for EXPERIMENTS.md.
+"""
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as B
+from repro.launch import steps as ST
+from repro.launch.dryrun import build_cell, parse_collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import ctx
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link
+
+
+def model_flops(cfg: B.ModelConfig, shape: B.ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference)
+    where D = processed tokens.  Embedding params excluded (lookup)."""
+    n_active = active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1  # one decode step
+    return 2.0 * n_active * tokens
+
+
+def active_params(cfg: B.ModelConfig) -> float:
+    """Non-embedding parameters touched per token."""
+    d, hd = cfg.d_model, cfg.hd
+    n = 0.0
+    for spec in cfg.period:
+        if spec.kind == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * d
+            H = d_in // s.headdim
+            n += d * (2 * d_in + 2 * s.n_groups * s.d_state + H)
+            n += d_in * d  # out proj
+        else:
+            n += d * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd
+            n += cfg.n_heads * hd * d
+        if spec.has_ffn:
+            if spec.moe:
+                m = cfg.moe
+                n += d * m.n_experts  # router
+                n += m.top_k * 3 * d * m.d_ff_expert
+            else:
+                mult = 3 if cfg.act == "swiglu" else 2
+                n += mult * d * cfg.d_ff
+    n *= cfg.n_periods
+    # lm head matmul participates in compute
+    n += d * cfg.vocab * (cfg.n_codebooks if cfg.frontend == "audio" else 1)
+    return n
+
+
+def _measure(arch_id: str, shape: B.ShapeConfig, n_periods: int) -> dict:
+    """Lower+compile the cell at a reduced period count; raw per-module
+    sums (no trip multiplication)."""
+    mod = B.get_arch(arch_id)
+    cfg: B.ModelConfig = mod.CONFIG
+    p_len = len(cfg.period)
+    # UNROLLED (scan_layers=False): XLA cost analysis counts while bodies
+    # once, so depth variation under a scan measures nothing — unrolled
+    # variants count the full per-layer work.
+    cfg_small = dataclasses.replace(cfg, n_layers=n_periods * p_len,
+                                    scan_layers=False)
+    # monkey-patch the arch module CONFIG so build_cell sees the variant
+    old = mod.CONFIG
+    mod.CONFIG = cfg_small
+    try:
+        fn, args, in_sh, out_sh, donate, _ = build_cell(arch_id, shape)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        compiled = jitted.lower(*args).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        colls = parse_collective_bytes(compiled.as_text(), {"default": 1})
+        return {"flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "coll": colls["total_bytes"],
+                "per_op": colls["per_op"]}
+    finally:
+        mod.CONFIG = old
+
+
+def analyze_cell(arch_id: str, shape: B.ShapeConfig) -> dict:
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = B.get_arch(arch_id).CONFIG
+    with ctx.use_mesh(mesh):
+        f1 = _measure(arch_id, shape, 1)
+        f2 = _measure(arch_id, shape, 2)
+    body = {k: f2[k] - f1[k] for k in ("flops", "bytes", "coll")}
+    base = {k: f1[k] - body[k] for k in ("flops", "bytes", "coll")}
+    total = {k: max(0.0, base[k] + body[k] * cfg.n_periods)
+             for k in ("flops", "bytes", "coll")}
+    mf = model_flops(cfg, shape)
+    chips = mesh.size
+    compute_s = total["flops"] / PEAK_FLOPS
+    memory_s = total["bytes"] / HBM_BW
+    coll_s = total["coll"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    # useful-compute fraction: analytic model flops per chip vs HLO flops
+    ratio = (mf / chips) / max(total["flops"], 1e-9)
+    roofline_fraction = (mf / chips / PEAK_FLOPS) / max(bound_s, 1e-12)
+    return {
+        "arch": arch_id, "shape": shape.name, "chips": chips,
+        "hlo_flops_per_chip": total["flops"],
+        "hlo_bytes_per_chip": total["bytes"],
+        "coll_bytes_per_chip": total["coll"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops_total": mf,
+        "useful_flops_ratio": ratio,
+        "roofline_fraction": roofline_fraction,
+        "per_op_p2": f2["per_op"],
+    }
+
+
+NOTES = {
+    "compute": ("dominant term is compute: reduce recompute (remat policy), "
+                "skip fully-masked causal KV blocks, or use more chips"),
+    "memory": ("dominant term is HBM: fuse/chunk the loss, cut activation "
+               "round-trips, shard the weak dim, or quantize weights"),
+    "collective": ("dominant term is ICI: reshard to cut all-gathers, "
+                   "overlap collectives with compute (microbatch scan), "
+                   "or compress gradients"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/roofline.csv")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in B.ARCH_IDS:
+            for shape in B.shapes_for(arch):
+                cells.append((arch, shape))
+    else:
+        shape = {s.name: s for s in B.ALL_SHAPES}[args.shape]
+        cells.append((args.arch, shape))
+
+    rows = []
+    for arch, shape in cells:
+        try:
+            r = analyze_cell(arch, shape)
+        except Exception as e:
+            r = {"arch": arch, "shape": shape.name, "error": str(e)[:200]}
+        rows.append(r)
+        print(json.dumps({k: (round(v, 6) if isinstance(v, float) else v)
+                          for k, v in r.items() if k != "per_op_p2"}),
+              flush=True)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    cols = ["arch", "shape", "chips", "hlo_flops_per_chip",
+            "hlo_bytes_per_chip", "coll_bytes_per_chip", "compute_s",
+            "memory_s", "collective_s", "dominant", "model_flops_total",
+            "useful_flops_ratio", "roofline_fraction"]
+    with open(args.out, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    with open(args.out.replace(".csv", "_notes.json"), "w") as f:
+        json.dump([{**{k: v for k, v in r.items() if k != "per_op_p2"},
+                    "note": NOTES.get(r.get("dominant", ""), "")}
+                   for r in rows], f, indent=1)
+    print(f"[roofline] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

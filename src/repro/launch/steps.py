@@ -1,0 +1,124 @@
+"""Step builders: train / prefill / decode, shared by train.py, serve.py and
+dryrun.py so the dry-run lowers EXACTLY what the launchers execute."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, input_specs
+from repro.models import model as M
+from repro.optim import OptConfig, apply_gradients, init_opt_state
+from repro.parallel import ctx
+
+Tree = Any
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    microbatches: int = 1):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``microbatches`` > 1 accumulates gradients with a lax.scan over batch
+    slices — the compute/communication-overlap lever (XLA overlaps the DP
+    reduction of microbatch i with compute of i+1).
+    """
+
+    def loss_fn(params, tokens, targets, image_embeds=None):
+        return M.lm_loss(params, tokens, targets, cfg,
+                         image_embeds=image_embeds)
+
+    def train_step(params, opt_state, batch, step):
+        tokens, targets = batch["tokens"], batch["targets"]
+        img = batch.get("image_embeds")
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, tokens,
+                                                      targets, img)
+        else:
+            B = tokens.shape[0]
+            mb = B // microbatches
+            resh = lambda x: x.reshape(microbatches, mb, *x.shape[1:])
+            mb_batch = jax.tree.map(resh, {"tokens": tokens,
+                                           "targets": targets})
+
+            def acc_fn(carry, mbk):
+                loss_acc, grad_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(
+                    params, mbk["tokens"], mbk["targets"], img)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grad_acc, g)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zeros), mb_batch)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        params, opt_state = apply_gradients(params, grads, opt_state, step,
+                                            opt_cfg)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch["tokens"], cfg,
+                         image_embeds=batch.get("image_embeds"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, seq_shard: bool = False):
+    def decode_step(params, cache, batch):
+        logits, cache = M.decode_step(params, cache, batch["tokens"],
+                                      batch["pos"], cfg,
+                                      seq_shard=seq_shard)
+        return logits, cache
+    return decode_step
+
+
+# --------------------------- sharding assembly ------------------------------
+
+def resolve_tree(spec_tree: Tree):
+    """Logical spec tree -> NamedSharding tree against the active mesh."""
+    return ctx.map_specs(lambda s: ctx.named_sharding(tuple(s)), spec_tree)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tree:
+    """Logical sharding for the input batch of this shape cell."""
+    dp = ctx.axis_size("dp")
+    tok = ("dp", None, None) if cfg.frontend == "audio" else ("dp", None)
+    if shape.mode == "train":
+        s = {"tokens": tok, "targets": tok}
+    elif shape.mode == "prefill":
+        s = {"tokens": tok}
+    else:
+        B = shape.global_batch
+        btok = tok if B >= dp else ((None, None, None) if
+                                    cfg.frontend == "audio" else (None, None))
+        s = {"tokens": btok, "pos": (btok[0],)}
+    if cfg.frontend == "vision":
+        s["image_embeds"] = ("dp", None, None)
+    return s
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: OptConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(lambda: init_opt_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params),
+        opt_cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, max_len))
+
+
+def stacked_cache_specs(cfg: ModelConfig, batch: int) -> Tree:
+    """Cache logical specs with the leading period-stack axis prepended."""
+    per = M.cache_specs(cfg, batch)
+    return ctx.map_specs(lambda s: (None,) + tuple(s), per)

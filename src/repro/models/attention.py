@@ -1,0 +1,333 @@
+"""Attention layers: GQA self-attention (blocked online-softmax), cross-
+attention for the VLM frontend, and decode attention with split-KV merging
+(flash-decoding) for sequence-sharded caches.
+
+The *blocked* implementation is the default everywhere: it is differentiable,
+compiles on any backend, and its peak memory is O(S·block_kv) instead of
+O(S²) — which is what makes the 32k-prefill dry-run cells fit.  The Pallas
+flash kernel (kernels/flash_attention.py) is the TPU hot path, selected with
+``cfg.attn_impl == "pallas"``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, matmul, rms_norm, rope_angles
+
+Tree = Any
+NEG_INF = -1e30
+
+
+# ------------------------------ params -------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Tree:
+    d, hd = cfg.d_model, cfg.hd
+    dt = cfg.pdtype()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    kv_in = d  # frontend stub provides image embeds already at d_model
+    p = {"wq": dense_init(k1, d, cfg.n_heads * hd, dt),
+         "wk": dense_init(k2, kv_in, cfg.n_kv_heads * hd, dt),
+         "wv": dense_init(k3, kv_in, cfg.n_kv_heads * hd, dt),
+         "wo": dense_init(k4, cfg.n_heads * hd, d, dt),
+         "norm": jnp.ones((d,), dt)}
+    if cross:
+        # gate so an untrained cross block is the identity (llama-3.2-vision)
+        p["gate"] = jnp.zeros((), dt)
+    return p
+
+
+def attention_specs(cfg: ModelConfig, cross: bool = False) -> Tree:
+    p = {"wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+         "wo": ("tp", "fsdp"), "norm": (None,)}
+    if cross:
+        p["gate"] = ()
+    return p
+
+
+# --------------------------- core attention maths --------------------------
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool, block_q: int, block_kv: int,
+                      q_offset: jax.Array | int = 0) -> jax.Array:
+    """Online-softmax attention, O(S·block) memory, differentiable.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D).  GQA via head repetition.
+    ``q_offset``: absolute position of q[0] (for decode/chunked prefill).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = D ** -0.5
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    # pad to block multiples
+    pq, pkv = (-Sq) % bq, (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pkv), (0, 0), (0, 0)))
+    nq, nkv = q.shape[1] // bq, k.shape[1] // bkv
+    qb = q.reshape(B, nq, bq, H, D).astype(jnp.float32) * scale
+    kb = k.reshape(B, nkv, bkv, H, D).astype(jnp.float32)
+    vb = v.reshape(B, nkv, bkv, H, D).astype(jnp.float32)
+
+    q_pos = (jnp.arange(nq * bq).reshape(nq, bq) + q_offset)
+    k_pos = jnp.arange(nkv * bkv).reshape(nkv, bkv)
+    kv_valid = (jnp.arange(nkv * bkv).reshape(nkv, bkv) < Skv)
+
+    def q_block(qi):
+        q_i = qb[:, qi]              # (B, bq, H, D)
+        pos_q = q_pos[qi]
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_i, kb[:, kj])
+            mask = kv_valid[kj][None, None, None, :]
+            if causal:
+                mask = mask & (pos_q[None, None, :, None] >=
+                               k_pos[kj][None, None, None, :])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb[:, kj])
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, H, bq, D), jnp.float32)
+        m0 = jnp.full((B, H, bq), NEG_INF)
+        l0 = jnp.zeros((B, H, bq))
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nkv))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)  # (B, bq, H, D)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))       # (nq, B, bq, H, D)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * bq, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def naive_attention(q, k, v, causal):
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def run_attention(q, k, v, cfg: ModelConfig, causal: bool = True,
+                  q_offset=0) -> jax.Array:
+    if cfg.attn_impl == "naive":
+        return naive_attention(q, k, v, causal)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        # kernel expects (B, H, S, D)
+        out = kops.flash_attention(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3), causal=causal)
+        return out.transpose(0, 2, 1, 3)
+    return blocked_attention(q, k, v, causal, cfg.attn_block_q,
+                             cfg.attn_block_kv, q_offset)
+
+
+# ------------------------------ layer apply ---------------------------------
+
+def self_attention(params: Tree, x: jax.Array, cfg: ModelConfig,
+                   positions: jax.Array | None = None) -> jax.Array:
+    """Pre-norm residual GQA self-attention over a full sequence."""
+    B, S, d = x.shape
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    hd = cfg.hd
+    q = matmul(h, params["wq"].astype(h.dtype), cfg).reshape(
+        B, S, cfg.n_heads, hd)
+    k = matmul(h, params["wk"].astype(h.dtype), cfg).reshape(
+        B, S, cfg.n_kv_heads, hd)
+    v = matmul(h, params["wv"].astype(h.dtype), cfg).reshape(
+        B, S, cfg.n_kv_heads, hd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    sin, cos = rope_angles(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    out = run_attention(q, k, v, cfg, causal=True)
+    out = matmul(out.reshape(B, S, cfg.n_heads * hd),
+                 params["wo"].astype(h.dtype), cfg)
+    return x + out, (k, v)
+
+
+def cross_attention(params: Tree, x: jax.Array, kv_embeds: jax.Array,
+                    cfg: ModelConfig,
+                    kv_cache: tuple | None = None) -> jax.Array:
+    """Gated cross-attention to frontend embeddings (no RoPE, not causal)."""
+    B, S, d = x.shape
+    hd = cfg.hd
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = matmul(h, params["wq"].astype(h.dtype), cfg).reshape(
+        B, S, cfg.n_heads, hd)
+    if kv_cache is not None:
+        k, v = kv_cache
+    else:
+        k = matmul(kv_embeds, params["wk"].astype(h.dtype), cfg).reshape(
+            B, -1, cfg.n_kv_heads, hd)
+        v = matmul(kv_embeds, params["wv"].astype(h.dtype), cfg).reshape(
+            B, -1, cfg.n_kv_heads, hd)
+    out = run_attention(q, k, v, cfg, causal=False)
+    out = matmul(out.reshape(B, S, cfg.n_heads * hd),
+                 params["wo"].astype(h.dtype), cfg)
+    gate = jnp.tanh(params["gate"].astype(jnp.float32)).astype(out.dtype)
+    return x + gate * out, (k, v)
+
+
+# ------------------------------ decode path ---------------------------------
+
+def decode_self_attention(params: Tree, x: jax.Array, k_cache: jax.Array,
+                          v_cache: jax.Array, pos: jax.Array,
+                          cfg: ModelConfig, seq_shards: int = 1,
+                          axis_name: str | None = None,
+                          kv_spec: tuple | None = None):
+    """One-token decode step against a KV cache.
+
+    x: (B, 1, D); caches: (B, S_max, Hkv, hd); pos: (B,) current lengths.
+    When the cache is sequence-sharded (long_500k: batch < data axis), this
+    runs under shard_map and merges per-shard partial attention with a
+    log-sum-exp reduction over ``axis_name`` (flash-decoding).
+
+    ``kv_spec``: the cache's logical sharding.  The freshly-projected K/V
+    arrive sharded by the weight layout ((kv·hd)/tp columns); constraining
+    the 1-token k_new/v_new to the CACHE layout before the in-place update
+    moves the reshard from the whole cache to the new token — this removed
+    GSPMD's per-step "involuntary full rematerialization" cache copies
+    (EXPERIMENTS.md §Perf hillclimb A).
+    """
+    from repro.parallel import ctx
+    B, _, d = x.shape
+    hd = cfg.hd
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q = matmul(h, params["wq"].astype(h.dtype), cfg).reshape(
+        B, 1, cfg.n_heads, hd)
+    k_new = matmul(h, params["wk"].astype(h.dtype), cfg).reshape(
+        B, 1, cfg.n_kv_heads, hd)
+    v_new = matmul(h, params["wv"].astype(h.dtype), cfg).reshape(
+        B, 1, cfg.n_kv_heads, hd)
+    sin, cos = rope_angles(pos[:, None], hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+    if kv_spec is not None:
+        k_new = ctx.shard(k_new, *kv_spec)
+        v_new = ctx.shard(v_new, *kv_spec)
+        # align q with the cache layout as well: when the cache shards
+        # head_dim, a head-sharded q would force GSPMD to all-gather the
+        # whole cache per step (hillclimb A2) — with q on the same layout
+        # the qk contraction is shard-wise + a tiny psum of the scores.
+        q = ctx.shard(q, *kv_spec)
+
+    S_local = k_cache.shape[1]
+    if axis_name is None:
+        # cache local to this shard: write the new token, attend to prefix
+        k_cache = jax.vmap(
+            lambda c, kn, p: jax.lax.dynamic_update_slice(c, kn, (p, 0, 0))
+        )(k_cache, k_new, pos)
+        v_cache = jax.vmap(
+            lambda c, vn, p: jax.lax.dynamic_update_slice(c, vn, (p, 0, 0))
+        )(v_cache, v_new, pos)
+        valid = jnp.arange(S_local)[None, :] <= pos[:, None]   # (B, S)
+        out = _masked_decode_attn(q, k_cache, v_cache, valid, cfg,
+                                  kv_spec=kv_spec)
+    else:
+        # sequence-sharded cache: each shard owns rows
+        # [shard*S_local, (shard+1)*S_local); only the owner writes the token
+        if isinstance(axis_name, tuple):
+            shard = jnp.int32(0)
+            for ax in axis_name:  # row-major linearized multi-axis index
+                shard = shard * jax.lax.axis_size(ax) + \
+                    jax.lax.axis_index(ax)
+        else:
+            shard = jax.lax.axis_index(axis_name)
+        local_pos = pos - shard * S_local
+        own = (local_pos >= 0) & (local_pos < S_local)
+        lp = jnp.clip(local_pos, 0, S_local - 1)
+        upd = lambda c, n, p, o: jax.lax.dynamic_update_slice(
+            c, jnp.where(o, n, jax.lax.dynamic_slice(
+                c, (p, 0, 0), n.shape)), (p, 0, 0))
+        k_cache = jax.vmap(upd)(k_cache, k_new, lp, own)
+        v_cache = jax.vmap(upd)(v_cache, v_new, lp, own)
+        gpos = jnp.arange(S_local)[None, :] + shard * S_local
+        valid = gpos <= pos[:, None]
+        m, l, o_part = _partial_decode_attn(q, k_cache, v_cache, valid, cfg)
+        # LSE merge across shards
+        m_glob = jax.lax.pmax(m, axis_name)
+        w = jnp.exp(m - m_glob)
+        l_glob = jax.lax.psum(l * w, axis_name)
+        out = jax.lax.psum(o_part * w[..., None], axis_name) / \
+            jnp.maximum(l_glob, 1e-30)[..., None]
+        out = out.transpose(0, 2, 1, 3).astype(x.dtype)
+
+    out = matmul(out.reshape(B, 1, cfg.n_heads * hd),
+                 params["wo"].astype(h.dtype), cfg)
+    return x + out, k_cache, v_cache
+
+
+def _expand_kv(k, v, H):
+    rep = H // k.shape[2]
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return k, v
+
+
+def _masked_decode_attn(q, k, v, valid, cfg, kv_spec=None):
+    """q: (B,1,H,hd); k/v: (B,S,Hkv,hd); valid: (B,S) -> (B,1,H,hd).
+
+    Grouped-head einsum: GQA without ``jnp.repeat`` — repeating kv-heads
+    would materialize (and under hd-sharding, all-gather) group× the cache
+    (hillclimb A3).  With ``kv_spec`` the softmax weights are explicitly
+    replicated so the p·v contraction stays shard-wise on head_dim.
+    """
+    from repro.parallel import ctx
+    B, _, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    # keep the cache in its storage dtype and accumulate in f32
+    # (hillclimb A4: astype(f32) on the cache materializes 2x cache bytes
+    # per layer per step) — softmax itself stays f32.
+    qg = q.reshape(B, 1, Hkv, g, hd).astype(k.dtype)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * (cfg.hd ** -0.5)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)              # (B, Hkv, g, 1, S)
+    if kv_spec is not None:
+        p = ctx.shard(p, kv_spec[0], None, None, None, None)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def _partial_decode_attn(q, k, v, valid, cfg):
+    """Per-shard partial softmax stats (m, l, unnormalized o)."""
+    k, v = _expand_kv(k, v, cfg.n_heads)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (cfg.hd ** -0.5)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)                          # (B, H, 1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)                          # (B, H, 1)
+    o = jnp.einsum("bhqk,bkhd->bhqd", p, v.astype(jnp.float32))
+    return m, l, o

@@ -1,0 +1,140 @@
+"""Shared neural-net building blocks (pure-function params-as-pytrees style).
+
+Every module provides ``init_*`` (param tree), ``*_specs`` (matching tree of
+LOGICAL sharding axes, resolved to mesh axes by parallel/sharding.py) and an
+apply function.  Logical axes used throughout:
+
+    "fsdp"   parameter shards over the (pod, data) axes (ZeRO-style)
+    "tp"     tensor-parallel shard over the model axis
+    None     replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Tree = Any
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def matmul(x: jax.Array, w: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Projection matmul; routes through the approximate-multiplier emulation
+    when ``cfg.approx_matmul`` (models/quant.py — evolved-circuit LUT)."""
+    if cfg.approx_matmul:
+        from repro.models import quant
+        return quant.approx_matmul(x, w)
+    return x @ w
+
+
+# ----------------------------- rotary embeddings ---------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) with shape positions.shape + (head_dim/2,)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); sin/cos: (..., S, D/2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(dt)
+
+
+# ----------------------------- embeddings ----------------------------------
+
+def init_embed(key, cfg: ModelConfig) -> Tree:
+    dt = cfg.pdtype()
+    if cfg.frontend == "audio":
+        tok = (jax.random.normal(key, (cfg.n_codebooks, cfg.vocab,
+                                       cfg.d_model), jnp.float32)
+               * 0.02).astype(dt)
+    else:
+        tok = (jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32)
+               * 0.02).astype(dt)
+    return {"tokens": tok}
+
+
+def embed_specs(cfg: ModelConfig) -> Tree:
+    """Vocab-shard the table over "tp" when divisible; else shard d_model
+    (mamba2's GPT-NeoX vocab 50280 is not 16-divisible)."""
+    from repro.parallel import ctx
+    tp = max(1, ctx.axis_size("tp"))
+    dp = max(1, ctx.axis_size("dp"))
+    v_tp = "tp" if cfg.vocab % tp == 0 else None
+    v_fs = "fsdp" if cfg.vocab % dp == 0 else None
+    # NOTE (§Perf hillclimb B4, REVERTED): fsdp-sharding the d axis here
+    # looked free for the gradient but shards the lm-head CONTRACTION dim,
+    # forcing a (B,S,V/tp) logits psum over data every forward — measured
+    # 0.2-0.6x regressions on train/prefill.  d stays replicated.
+    if cfg.frontend == "audio":
+        return {"tokens": (None, "tp", None) if v_tp
+                else (None, v_fs, "tp")}
+    return {"tokens": ("tp", None) if v_tp else (v_fs, "tp")}
+
+
+def embed_tokens(params: Tree, tokens: jax.Array, cfg: ModelConfig):
+    tok = params["tokens"]
+    if cfg.frontend == "audio":
+        # tokens: (B, S, C) — sum the per-codebook embeddings tok[c] (the
+        # EnCodec frontend itself is a stub per the task spec)
+        out = 0.0
+        for c in range(cfg.n_codebooks):
+            out = out + jnp.take(tok[c], tokens[..., c], axis=0)
+        return out.astype(cfg.adtype())
+    return jnp.take(tok, tokens, axis=0).astype(cfg.adtype())
+
+
+# ----------------------------- MLP (dense FFN) -----------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Tree:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.pdtype()
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k2, d, f, dt),
+         "w_down": dense_init(k3, f, d, dt),
+         "norm": jnp.ones((d,), dt)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = dense_init(k1, d, f, dt)
+    return p
+
+
+def mlp_specs(cfg: ModelConfig) -> Tree:
+    p = {"w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp"), "norm": (None,)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = ("fsdp", "tp")
+    return p
+
+
+def mlp(params: Tree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    up = matmul(h, params["w_up"].astype(h.dtype), cfg)
+    if cfg.act == "swiglu":
+        gate = matmul(h, params["w_gate"].astype(h.dtype), cfg)
+        inner = jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype) * up
+    else:
+        inner = jax.nn.gelu(up.astype(jnp.float32)).astype(h.dtype)
+    return x + matmul(inner, params["w_down"].astype(h.dtype), cfg)

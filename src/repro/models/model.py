@@ -1,0 +1,425 @@
+"""Composable decoder-only LM covering all ten assigned architectures.
+
+A model is a repeating *period* of LayerSpecs (configs/base.py): dense GQA
+transformers are a 1-layer period; jamba is an 8-layer period (1 attn : 7
+mamba, MoE on odd layers); llama-3.2-vision a 5-layer period (1 cross-attn +
+4 self-attn); mamba2 a 1-layer ssm period without FFN.  Parameters for the
+period are stacked over ``n_periods`` and the stack is traversed with
+``lax.scan`` — HLO size is independent of depth, which is what keeps the
+512-device dry-run compiles tractable (DESIGN.md §5).
+
+Three entry points per the shape cells:
+    forward_train  — full-sequence logits (+ MoE aux loss)
+    prefill        — logits + populated caches
+    decode_step    — one token against caches (KV / SSM / cross)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import (embed_specs, embed_tokens, init_embed,
+                                 init_mlp, mlp, mlp_specs, rms_norm)
+from repro.parallel import ctx
+
+Tree = Any
+
+
+# ------------------------------- init ---------------------------------------
+
+def _init_period(key, cfg: ModelConfig) -> Tree:
+    p = {}
+    for i, spec in enumerate(cfg.period):
+        k_mix, k_ffn = jax.random.split(jax.random.fold_in(key, i))
+        if spec.kind == "ssm":
+            mix = SSM.init_ssm(k_mix, cfg)
+        else:
+            mix = A.init_attention(k_mix, cfg, cross=spec.cross_attn)
+        lp = {"mixer": mix}
+        if spec.has_ffn:
+            lp["ffn"] = (MOE.init_moe(k_ffn, cfg) if spec.moe
+                         else init_mlp(k_ffn, cfg))
+        p[f"layer{i}"] = lp
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Tree:
+    k_e, k_l, k_h = jax.random.split(key, 3)
+    period_keys = jax.random.split(k_l, cfg.n_periods)
+    layers = jax.vmap(lambda k: _init_period(k, cfg))(period_keys)
+    params = {
+        "embed": init_embed(k_e, cfg),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype()),
+    }
+    if cfg.frontend == "audio":
+        params["lm_head"] = (jax.random.normal(
+            k_h, (cfg.n_codebooks, cfg.d_model, cfg.vocab), jnp.float32)
+            * 0.02).astype(cfg.pdtype())
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            k_h, (cfg.d_model, cfg.vocab), jnp.float32) * 0.02
+            ).astype(cfg.pdtype())
+    return params
+
+
+def _period_specs(cfg: ModelConfig) -> Tree:
+    p = {}
+    for i, spec in enumerate(cfg.period):
+        if spec.kind == "ssm":
+            mix = SSM.ssm_specs(cfg)
+        else:
+            mix = A.attention_specs(cfg, cross=spec.cross_attn)
+        lp = {"mixer": mix}
+        if spec.has_ffn:
+            lp["ffn"] = MOE.moe_specs(cfg) if spec.moe else mlp_specs(cfg)
+        p[f"layer{i}"] = lp
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Tree:
+    """Tree of LOGICAL sharding tuples matching init_params exactly."""
+    layer = ctx.map_specs(lambda s: (None,) + tuple(s), _period_specs(cfg))
+    specs = {
+        "embed": embed_specs(cfg),
+        "layers": layer,
+        "final_norm": (None,),
+    }
+    if cfg.frontend == "audio":
+        specs["lm_head"] = (None, None, "tp")
+    elif not cfg.tie_embeddings:
+        specs["lm_head"] = (None, "tp")
+    return specs
+
+
+# ------------------------------- forward ------------------------------------
+
+def _use_ep(cfg: ModelConfig) -> bool:
+    mesh = ctx.get_mesh()
+    return (mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] > 1
+            and cfg.moe.n_experts % mesh.shape["model"] == 0)
+
+
+def _apply_ffn(spec: LayerSpec, lp: Tree, x, cfg: ModelConfig,
+               full_capacity: bool = False):
+    if not spec.has_ffn:
+        return x, 0.0
+    if spec.moe:
+        if _use_ep(cfg):
+            return MOE.moe_ffn_ep(lp["ffn"], x, cfg, ctx.get_mesh(),
+                                  full_capacity=full_capacity)
+        return MOE.moe_ffn(lp["ffn"], x, cfg, full_capacity=full_capacity)
+    return mlp(lp["ffn"], x, cfg), 0.0
+
+
+def _apply_period(period_params: Tree, x, cfg: ModelConfig,
+                  image_embeds=None):
+    """One period of layers (train/prefill, no cache)."""
+    from jax.ad_checkpoint import checkpoint_name
+    aux = 0.0
+    for i, spec in enumerate(cfg.period):
+        lp = period_params[f"layer{i}"]
+        x = ctx.shard(x, "dp", None, None)
+        if spec.kind == "ssm":
+            x, _ = SSM.ssm_forward(lp["mixer"], x, cfg)
+        elif spec.cross_attn:
+            x, _ = A.cross_attention(lp["mixer"], x, image_embeds, cfg)
+        else:
+            x, _ = A.self_attention(lp["mixer"], x, cfg)
+        x = checkpoint_name(x, "mixer_out")
+        x, a = _apply_ffn(spec, lp, x, cfg)
+        x = checkpoint_name(x, "ffn_out")
+        aux = aux + a
+    return x, aux
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "block_outputs":
+        return jax.checkpoint_policies.save_only_these_names(
+            "mixer_out", "ffn_out")
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def backbone(params: Tree, x: jax.Array, cfg: ModelConfig,
+             image_embeds=None) -> tuple[jax.Array, jax.Array]:
+    """Embedded inputs -> final hidden states (scan over periods)."""
+    period_fn = functools.partial(_apply_period, cfg=cfg,
+                                  image_embeds=image_embeds)
+    if cfg.remat:
+        period_fn = jax.checkpoint(period_fn, policy=_remat_policy(cfg))
+    if cfg.scan_layers and cfg.n_periods > 1:
+        def body(carry, period_params):
+            x, aux = carry
+            x, a = period_fn(period_params, x)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), params["layers"])
+    else:
+        aux = 0.0
+        for p_idx in range(cfg.n_periods):
+            pp = jax.tree.map(lambda l: l[p_idx], params["layers"])
+            x, a = period_fn(pp, x)
+            aux = aux + a
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def logits_from_hidden(params: Tree, x: jax.Array,
+                       cfg: ModelConfig) -> jax.Array:
+    if cfg.frontend == "audio":
+        w = params["lm_head"].astype(x.dtype)        # (C, D, V)
+        return jnp.einsum("bsd,cdv->bscv", x, w)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tokens"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    return x @ w
+
+
+def forward_train(params: Tree, tokens: jax.Array, cfg: ModelConfig,
+                  image_embeds=None):
+    """tokens -> (logits, moe aux loss)."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = ctx.shard(x, "dp", None, None)
+    x, aux = backbone(params, x, cfg, image_embeds)
+    return logits_from_hidden(params, x, cfg), aux
+
+
+def lm_loss(params: Tree, tokens, targets, cfg: ModelConfig,
+            image_embeds=None):
+    """Mean cross-entropy (+ MoE aux).  Optional vocab-chunked CE."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = ctx.shard(x, "dp", None, None)
+    x, aux = backbone(params, x, cfg, image_embeds)
+    if cfg.loss_vocab_chunk and cfg.frontend != "audio":
+        ce = _chunked_ce(params, x, targets, cfg)
+    else:
+        logits = logits_from_hidden(params, x, cfg).astype(jnp.float32)
+        if cfg.frontend == "audio":
+            lse = jax.nn.logsumexp(logits, axis=-1)            # (B,S,C)
+            tgt = jnp.take_along_axis(
+                logits, targets[..., None], axis=-1)[..., 0]
+            ce = (lse - tgt).mean()
+        else:
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(
+                logits, targets[..., None], axis=-1)[..., 0]
+            ce = (lse - tgt).mean()
+    return ce + 0.01 * aux
+
+
+def _chunked_ce(params, x, targets, cfg: ModelConfig):
+    """Sequence-chunked CE that never materializes (B,S,V) logits.
+
+    Memory-roofline optimization (EXPERIMENTS.md §Perf): peak goes from
+    O(B·S·V) to O(B·chunk·V).
+    """
+    B, S, D = x.shape
+    C = cfg.loss_vocab_chunk
+    n = max(1, S // C)
+    xs = x[:, :n * C].reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    ts = targets[:, :n * C].reshape(B, n, C).transpose(1, 0, 2)
+
+    def chunk_loss(carry, xt):
+        xc, tc = xt
+        logits = logits_from_hidden(params, xc, cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry + (lse - tgt).sum(), None
+
+    total, _ = jax.lax.scan(chunk_loss, 0.0, (xs, ts))
+    return total / (B * n * C)
+
+
+# ------------------------------- caches -------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> Tree:
+    """Decode caches stacked over periods (leading dim n_periods)."""
+    dtype = dtype or cfg.adtype()
+    hd = cfg.hd
+
+    def one_period():
+        c = {}
+        for i, spec in enumerate(cfg.period):
+            if spec.kind == "ssm":
+                c[f"layer{i}"] = SSM.init_ssm_state(cfg, batch, dtype)
+            elif spec.cross_attn:
+                c[f"layer{i}"] = {
+                    "k": jnp.zeros((batch, cfg.n_img_tokens,
+                                    cfg.n_kv_heads, hd), dtype),
+                    "v": jnp.zeros((batch, cfg.n_img_tokens,
+                                    cfg.n_kv_heads, hd), dtype)}
+            else:
+                c[f"layer{i}"] = {
+                    "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd),
+                                   dtype),
+                    "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, hd),
+                                   dtype)}
+        return c
+
+    one = one_period()
+    return jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.n_periods,) + l.shape), one)
+
+
+def cache_specs(cfg: ModelConfig, batch: int) -> Tree:
+    """Logical sharding for caches: batch over dp when divisible, else the
+    sequence axis (long_500k: flash-decoding split-KV, DESIGN.md §5)."""
+    seq_shard = batch < ctx.axis_size("dp")
+    tp = ctx.axis_size("tp")
+    # shard kv-heads over tp only when divisible; else shard head_dim
+    if cfg.n_kv_heads % max(tp, 1) == 0:
+        kv_spec = ("dp", None, "tp", None)
+    elif cfg.hd % max(tp, 1) == 0:
+        kv_spec = ("dp", None, None, "tp")
+    else:
+        kv_spec = ("dp", None, None, None)
+    c = {}
+    for i, spec in enumerate(cfg.period):
+        if spec.kind == "ssm":
+            c[f"layer{i}"] = SSM.SSMState(
+                conv_x=(None, None, "tp"),
+                conv_bc=(None, None, None),
+                ssm=(None, "tp", None, None))
+        elif spec.cross_attn or not seq_shard:
+            c[f"layer{i}"] = {"k": kv_spec, "v": kv_spec}
+        else:  # flash-decoding: sequence axis of the cache over "sp";
+            # heads replicated to match the split-KV shard_map exactly
+            c[f"layer{i}"] = {"k": (None, "sp", None, None),
+                              "v": (None, "sp", None, None)}
+    return c
+
+
+# ------------------------------- decode -------------------------------------
+
+def decode_step(params: Tree, cache: Tree, tokens: jax.Array,
+                pos: jax.Array, cfg: ModelConfig,
+                seq_shard: bool = False):
+    """One decode step.  tokens: (B, 1) (or (B, 1, C) audio); pos: (B,).
+
+    seq_shard=True runs attention-cache reads under shard_map with split-KV
+    LSE merging (long_500k path).
+    """
+    x = embed_tokens(params["embed"], tokens, cfg)
+    cspecs = cache_specs(cfg, tokens.shape[0])
+
+    def period_fn(x, period_params, period_cache):
+        new_cache = {}
+        for i, spec in enumerate(cfg.period):
+            lp = period_params[f"layer{i}"]
+            lc = period_cache[f"layer{i}"]
+            if spec.kind == "ssm":
+                x, st = SSM.ssm_decode_step(lp["mixer"], x, lc, cfg)
+                new_cache[f"layer{i}"] = st
+            elif spec.cross_attn:
+                x, _ = A.cross_attention(lp["mixer"], x, None, cfg,
+                                         kv_cache=(lc["k"], lc["v"]))
+                new_cache[f"layer{i}"] = lc
+            else:
+                if seq_shard:
+                    x, kc, vc = _decode_attn_seqshard(lp["mixer"], x, lc,
+                                                      pos, cfg)
+                else:
+                    x, kc, vc = A.decode_self_attention(
+                        lp["mixer"], x, lc["k"], lc["v"], pos, cfg,
+                        kv_spec=cspecs[f"layer{i}"]["k"])
+                new_cache[f"layer{i}"] = {"k": kc, "v": vc}
+            x, _ = _apply_ffn(spec, lp, x, cfg, full_capacity=True)
+        return x, new_cache
+
+    if cfg.scan_layers and cfg.n_periods > 1:
+        def body(x, pc):
+            period_params, period_cache = pc
+            x, nc = period_fn(x, period_params, period_cache)
+            return x, nc
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        ncs = []
+        for p_idx in range(cfg.n_periods):
+            pp = jax.tree.map(lambda l: l[p_idx], params["layers"])
+            pc = jax.tree.map(lambda l: l[p_idx], cache)
+            x, nc = period_fn(x, pp, pc)
+            ncs.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_from_hidden(params, x, cfg), new_cache
+
+
+def _decode_attn_seqshard(lp, x, lc, pos, cfg: ModelConfig):
+    """shard_map wrapper: cache sequence axis sharded over dp ("sp")."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    mesh = ctx.get_mesh()
+    if mesh is None:
+        return A.decode_self_attention(lp, x, lc["k"], lc["v"], pos, cfg)
+    sp = ctx.resolve_axis("sp")
+
+    def local(lp_l, x_l, k_l, v_l, pos_l):
+        return A.decode_self_attention(lp_l, x_l, k_l, v_l, pos_l, cfg,
+                                       axis_name=sp)
+
+    # all shards see replicated x/params; cache is split on sequence
+    pspec = jax.tree.map(lambda _: P(), lp)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(pspec, P(), P(None, sp, None, None),
+                  P(None, sp, None, None), P()),
+        out_specs=(P(), P(None, sp, None, None), P(None, sp, None, None)),
+        check_rep=False)
+    return fn(lp, x, lc["k"], lc["v"], pos)
+
+
+# ------------------------------- prefill ------------------------------------
+
+def prefill(params: Tree, tokens: jax.Array, cfg: ModelConfig,
+            max_len: int | None = None, image_embeds=None):
+    """Process a prompt, returning last-position logits and filled caches."""
+    B = tokens.shape[0]
+    S = tokens.shape[1]
+    max_len = max_len or S
+    x = embed_tokens(params["embed"], tokens, cfg)
+
+    def period_fn(x, period_params):
+        new_cache = {}
+        for i, spec in enumerate(cfg.period):
+            lp = period_params[f"layer{i}"]
+            if spec.kind == "ssm":
+                x, st = SSM.ssm_forward(lp["mixer"], x, cfg,
+                                        return_state=True)
+                new_cache[f"layer{i}"] = st
+            elif spec.cross_attn:
+                x, (k, v) = A.cross_attention(lp["mixer"], x, image_embeds,
+                                              cfg)
+                new_cache[f"layer{i}"] = {"k": k, "v": v}
+            else:
+                x, (k, v) = A.self_attention(lp["mixer"], x, cfg)
+                pad = max_len - S
+                if pad > 0:
+                    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                new_cache[f"layer{i}"] = {"k": k, "v": v}
+            x, _ = _apply_ffn(spec, lp, x, cfg)
+        return x, new_cache
+
+    if cfg.scan_layers and cfg.n_periods > 1:
+        x, cache = jax.lax.scan(
+            lambda c, pp: period_fn(c, pp), x, params["layers"])
+    else:
+        caches = []
+        for p_idx in range(cfg.n_periods):
+            pp = jax.tree.map(lambda l: l[p_idx], params["layers"])
+            x, nc = period_fn(x, pp)
+            caches.append(nc)
+        cache = jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, x[:, -1:], cfg)
+    return logits, cache

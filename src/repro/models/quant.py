@@ -1,0 +1,86 @@
+"""int8 quantization + evolved-approximate-multiplier matmul emulation.
+
+This is the deployment bridge for the paper's circuits (DESIGN.md §4):
+``set_multiplier_lut`` installs a 256×256 product table (from
+``core.library.multiplier_lut`` of an evolved 8×8 multiplier) and
+``approx_matmul`` then computes every projection as
+
+    y = scale_x · scale_w · Σ_k LUT[q(x)[m,k], q(w)[k,n]]
+
+i.e. the *exact* arithmetic a chip built from the evolved circuit would
+perform on uint8-quantized operands (asymmetric per-tensor quantization so
+operands are non-negative — matching the unsigned multipliers the paper
+evolves; the zero-point cross terms are corrected exactly with row/col sums).
+
+With no LUT installed the emulation reduces to exact int8 matmul (tested
+equal to float matmul up to quantization error).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LUT: jax.Array | None = None  # (256, 256) int32, LUT[a, b] ≈ a*b
+
+
+def set_multiplier_lut(lut: np.ndarray | None) -> None:
+    global _LUT
+    _LUT = None if lut is None else jnp.asarray(lut, jnp.int32)
+
+
+def get_multiplier_lut() -> jax.Array:
+    if _LUT is None:
+        a = jnp.arange(256, dtype=jnp.int32)
+        return a[:, None] * a[None, :]
+    return _LUT
+
+
+def quantize_u8(x: jax.Array, axis=None):
+    """Asymmetric uint8: returns (q, scale, zero) with x ≈ scale*(q - zero)."""
+    xf = x.astype(jnp.float32)
+    lo = xf.min() if axis is None else xf.min(axis, keepdims=True)
+    hi = xf.max() if axis is None else xf.max(axis, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / 255.0
+    zero = jnp.round(-lo / scale)
+    q = jnp.clip(jnp.round(xf / scale + zero), 0, 255).astype(jnp.int32)
+    return q, scale, zero
+
+
+def approx_matmul(x: jax.Array, w: jax.Array,
+                  lut: jax.Array | None = None) -> jax.Array:
+    """x: (..., K) fp; w: (K, N) fp -> (..., N) fp via LUT arithmetic."""
+    lut = get_multiplier_lut() if lut is None else lut
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    qx, sx, zx = quantize_u8(x2)
+    qw, sw, zw = quantize_u8(w)
+
+    from repro.kernels import ref as kref
+    M, N = x2.shape[0], w.shape[1]
+    # chunk the M dim so the (M, K, N) gather in the oracle stays bounded;
+    # on TPU this dispatches to kernels.ops.lut_matmul instead.
+    if jax.default_backend() == "tpu":
+        from repro.kernels import ops as kops
+        acc = kops.lut_matmul(qx, qw, lut)
+    else:
+        acc = kref.lut_matmul_ref(qx, qw, lut)
+    acc = acc.astype(jnp.float32)
+    # exact zero-point correction: Σ(qx-zx)(qw-zw) = Σqxqw - zwΣqx - zxΣqw
+    # + K·zx·zw — the Σqxqw term uses the (approximate) LUT, the correction
+    # terms are exact integer sums (they would be adders on silicon).
+    row = qx.sum(-1, keepdims=True).astype(jnp.float32)       # (M,1)
+    col = qw.sum(0, keepdims=True).astype(jnp.float32)        # (1,N)
+    corr = acc - zw * row - zx * col + K * zx * zw
+    y = sx * sw * corr
+    return y.reshape(*lead, N).astype(x.dtype)
+
+
+def quant_error(x: jax.Array, w: jax.Array,
+                lut: jax.Array | None = None) -> float:
+    """Relative Frobenius error of the emulated matmul vs exact fp."""
+    y_ref = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    y = approx_matmul(x, w, lut).astype(jnp.float32)
+    return float(jnp.linalg.norm(y - y_ref) /
+                 jnp.maximum(jnp.linalg.norm(y_ref), 1e-9))

@@ -1,0 +1,242 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked-scan formulation.
+
+Faithful to the SSD algorithm of arXiv:2405.21060: within a chunk the
+recurrence is computed in its quadratic "attention" dual form (MXU-friendly
+Q×Q einsums); across chunks a sequential scan carries the (H, P, N) state.
+Peak memory is O(B·H·Q²) for ONE chunk because the chunk loop is a
+``lax.scan`` — this is what makes the 500k-context cells tractable, and
+decode is O(1) in sequence length (conv tail + SSM state only).
+
+TP sharding: heads/d_inner columns shard over "tp"; the (small) B/C group
+projections are replicated, so the depthwise conv is split into a sharded x
+conv and a replicated bc conv (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, matmul, rms_norm
+
+Tree = Any
+
+
+class SSMState(NamedTuple):
+    conv_x: jax.Array    # (B, convw-1, d_inner)
+    conv_bc: jax.Array   # (B, convw-1, 2*G*N)
+    ssm: jax.Array       # (B, H, P, N) float32
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.headdim
+    return d_inner, H, s.headdim, s.n_groups, s.d_state
+
+
+def init_ssm(key, cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_inner, H, P, G, N = dims(cfg)
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 8)
+    # init dt bias so softplus(dt_bias) spans [dt_min, dt_max] (mamba2 init)
+    u = jax.random.uniform(ks[6], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min))
+                  + math.log(s.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))  # inverse softplus
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_z": dense_init(ks[0], d, d_inner, dt),
+        "w_x": dense_init(ks[1], d, d_inner, dt),
+        "w_bc": dense_init(ks[2], d, 2 * G * N, dt),
+        "w_dt": dense_init(ks[3], d, H, dt),
+        "dt_bias": dt_bias.astype(dt),
+        "a_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)).astype(dt),
+        "d_skip": jnp.ones((H,), dt),
+        "conv_x_w": (jax.random.normal(ks[4], (s.conv_width, d_inner),
+                                       jnp.float32) * 0.1).astype(dt),
+        "conv_bc_w": (jax.random.normal(ks[5], (s.conv_width, 2 * G * N),
+                                        jnp.float32) * 0.1).astype(dt),
+        "gate_norm": jnp.ones((d_inner,), dt),
+        "w_out": dense_init(ks[7], d_inner, d, dt),
+    }
+
+
+def ssm_specs(cfg: ModelConfig) -> Tree:
+    return {
+        "norm": (None,), "w_z": ("fsdp", "tp"), "w_x": ("fsdp", "tp"),
+        "w_bc": ("fsdp", None), "w_dt": ("fsdp", "tp"), "dt_bias": ("tp",),
+        "a_log": ("tp",), "d_skip": ("tp",),
+        "conv_x_w": (None, "tp"), "conv_bc_w": (None, None),
+        "gate_norm": ("tp",), "w_out": ("tp", "fsdp"),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array,
+                           tail: jax.Array | None = None) -> jax.Array:
+    """x: (B, S, C); w: (convw, C); optional tail: (B, convw-1, C)."""
+    convw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], convw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(convw))
+    return out
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P), dt: (B,S,H) (already softplus'd), A: (H,) < 0,
+    Bm/Cm: (B,S,G,N).  Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = xh.shape[1] // Q
+    rep = H // G  # heads per group
+
+    xh = xh.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dt = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bm = Bm.reshape(Bsz, nc, Q, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, nc, Q, G, N).astype(jnp.float32)
+    # expand groups to heads (G is small; rep is static)
+    Bh = jnp.repeat(Bm, rep, axis=3)       # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=3)
+
+    dA = dt * A[None, None, None, :]                    # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                        # inclusive
+    state0 = (jnp.zeros((Bsz, H, P, N), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def chunk_step(state, c):
+        x_c, dt_c = xh[:, c], dt[:, c]
+        B_c, C_c = Bh[:, c], Ch[:, c]
+        cum_c, dA_c = cum[:, c], dA[:, c]
+        # off-diagonal: contribution of the incoming state
+        decay_in = jnp.exp(cum_c)                       # (B,Q,H)
+        y_off = jnp.einsum("bqhn,bhpn,bqh->bqhp", C_c, state, decay_in)
+        # diagonal: within-chunk dual (quadratic) form
+        seg = cum_c[:, :, None, :] - cum_c[:, None, :, :]   # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((Q, Q), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bqhn,bshn->bqsh", C_c, B_c)        # (B,Q,Q,H)
+        y_diag = jnp.einsum("bqsh,bsh,bshp->bqhp", cb * L, dt_c, x_c)
+        # state passed to the next chunk
+        decay_out = jnp.exp(cum_c[:, -1:, :] - cum_c)       # (B,Q,H)
+        state_new = jnp.einsum("bqhn,bqh,bqhp->bhpn",
+                               B_c, decay_out * dt_c, x_c)
+        chunk_decay = jnp.exp(cum_c[:, -1, :])              # (B,H)
+        state = state * chunk_decay[:, :, None, None] + state_new
+        return state, y_off + y_diag
+
+    state, ys = jax.lax.scan(chunk_step, state0, jnp.arange(nc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, nc * Q, H, P)
+    return y[:, :S], state
+
+
+def ssm_forward(params: Tree, x: jax.Array, cfg: ModelConfig,
+                state: SSMState | None = None,
+                return_state: bool = False):
+    """Full-sequence mamba2 mixer (train / prefill)."""
+    Bsz, S, d = x.shape
+    s = cfg.ssm
+    d_inner, H, P, G, N = dims(cfg)
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    z = matmul(h, params["w_z"].astype(h.dtype), cfg)
+    xin = matmul(h, params["w_x"].astype(h.dtype), cfg)
+    bc = matmul(h, params["w_bc"].astype(h.dtype), cfg)
+    dt_raw = matmul(h, params["w_dt"].astype(h.dtype), cfg)
+
+    tail_x = state.conv_x if state is not None else None
+    tail_bc = state.conv_bc if state is not None else None
+    xin = jax.nn.silu(_causal_depthwise_conv(
+        xin, params["conv_x_w"].astype(h.dtype), tail_x).astype(jnp.float32))
+    bc = jax.nn.silu(_causal_depthwise_conv(
+        bc, params["conv_bc_w"].astype(h.dtype), tail_bc).astype(jnp.float32))
+    Bm, Cm = jnp.split(bc.reshape(Bsz, S, 2 * G, N), 2, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xin.reshape(Bsz, S, H, P)
+    init = state.ssm if state is not None else None
+    y, final_state = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, init)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(Bsz, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 params["gate_norm"], cfg.norm_eps).astype(x.dtype)
+    out = x + matmul(y, params["w_out"].astype(x.dtype), cfg)
+    if not return_state:
+        return out, None
+    convw = s.conv_width
+    # conv tails: last convw-1 pre-activation conv inputs
+    h_x = matmul(h, params["w_x"].astype(h.dtype), cfg)
+    h_bc = matmul(h, params["w_bc"].astype(h.dtype), cfg)
+    new_state = SSMState(
+        conv_x=h_x[:, -(convw - 1):, :],
+        conv_bc=h_bc[:, -(convw - 1):, :],
+        ssm=final_state)
+    return out, new_state
+
+
+def ssm_decode_step(params: Tree, x: jax.Array, state: SSMState,
+                    cfg: ModelConfig):
+    """Single-token decode: O(1) state update.  x: (B, 1, D)."""
+    Bsz = x.shape[0]
+    s = cfg.ssm
+    d_inner, H, P, G, N = dims(cfg)
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    z = matmul(h, params["w_z"].astype(h.dtype), cfg)[:, 0]
+    xin_pre = matmul(h, params["w_x"].astype(h.dtype), cfg)     # (B,1,din)
+    bc_pre = matmul(h, params["w_bc"].astype(h.dtype), cfg)
+    dt_raw = matmul(h, params["w_dt"].astype(h.dtype), cfg)[:, 0]
+
+    # conv via stored tails
+    cx = jnp.concatenate([state.conv_x.astype(h.dtype), xin_pre], axis=1)
+    cbc = jnp.concatenate([state.conv_bc.astype(h.dtype), bc_pre], axis=1)
+    w_x, w_bc = params["conv_x_w"].astype(h.dtype), params["conv_bc_w"].astype(h.dtype)
+    xin = jax.nn.silu(jnp.einsum("bwc,wc->bc", cx, w_x).astype(jnp.float32))
+    bc = jax.nn.silu(jnp.einsum("bwc,wc->bc", cbc, w_bc).astype(jnp.float32))
+    Bm, Cm = jnp.split(bc.reshape(Bsz, 2 * G, N), 2, axis=1)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)   # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                                # (B,H)
+    xh = xin.reshape(Bsz, H, P)
+    ssm = state.ssm * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, ssm)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(Bsz, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)),
+                 params["gate_norm"], cfg.norm_eps).astype(x.dtype)
+    out = x + matmul(y, params["w_out"].astype(x.dtype), cfg)[:, None, :]
+    new_state = SSMState(conv_x=cx[:, 1:].astype(state.conv_x.dtype),
+                         conv_bc=cbc[:, 1:].astype(state.conv_bc.dtype),
+                         ssm=ssm)
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    d_inner, H, P, G, N = dims(cfg)
+    return SSMState(
+        conv_x=jnp.zeros((batch, s.conv_width - 1, d_inner), dtype),
+        conv_bc=jnp.zeros((batch, s.conv_width - 1, 2 * G * N), dtype),
+        ssm=jnp.zeros((batch, H, P, N), jnp.float32))

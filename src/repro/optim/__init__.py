@@ -1,0 +1,3 @@
+from repro.optim.optimizer import (OptConfig, init_opt_state, apply_gradients,
+                                   global_norm, opt_state_specs)
+from repro.optim.schedule import lr_at

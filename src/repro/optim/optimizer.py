@@ -1,0 +1,212 @@
+"""Optimizers: AdamW, block-wise 8-bit AdamW, Adafactor.
+
+All tree-based pure functions (no optax dependency).  The 8-bit and factored
+variants are the distributed-optimization levers that make the paper-table
+architectures (kimi-k2 1T) fit the production mesh: moment memory drops from
+8 bytes/param fp32 to ~2 bytes (8-bit) or ~0 (factored) — the per-cell
+effect is quantified in EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedule import lr_at
+
+Tree = Any
+BLOCK = 256  # 8-bit moment quantization block size
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adamw8bit | adafactor
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ----------------------------- 8-bit moments --------------------------------
+# Per-row DYNAMIC int8 quantization (bitsandbytes-style dynamic map): values
+# are stored as sign(x)·sqrt(|x|/rowmax) so small entries keep relative
+# resolution — critical for Adam's v, where a linearly-quantized near-zero
+# second moment would zero out and explode the update through 1/sqrt(v).
+#
+# SHAPE-PRESERVING on purpose: q has the param's exact shape (int8) and the
+# scale drops the last axis, so both inherit the param's sharding verbatim
+# (opt_state_specs) and the optimizer update stays fully local — a flat
+# blocked layout would misalign with the param shards and forced GSPMD into
+# full f32 all-reduce + s8 all-gather of every moment per step
+# (EXPERIMENTS.md §Perf hillclimb B2).
+
+def _q8(x: jax.Array):
+    if x.ndim == 0:
+        x = x.reshape(1)
+        q, s = _q8(x)
+        return q.reshape(()), s.reshape(())
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12)
+    norm = x / scale                               # in [-1, 1]
+    q = jnp.clip(jnp.round(127.0 * jnp.sign(norm) *
+                           jnp.sqrt(jnp.abs(norm))), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0].astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    qf = q.astype(jnp.float32) / 127.0
+    if q.ndim == 0:
+        return jnp.sign(qf) * qf * qf * scale
+    return jnp.sign(qf) * qf * qf * scale[..., None]
+
+
+# ----------------------------- state init -----------------------------------
+
+def init_opt_state(params: Tree, cfg: OptConfig) -> Tree:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.name == "adamw":
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params)}
+    if cfg.name == "adamw8bit":
+        def q0(p):
+            q, s = _q8(jnp.zeros(p.shape, jnp.float32))
+            return {"q": q, "s": s}
+        return {"m": jax.tree.map(q0, params),
+                "v": jax.tree.map(q0, params)}
+    if cfg.name == "adafactor":
+        def fac(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"fac": jax.tree.map(fac, params)}
+    raise ValueError(cfg.name)
+
+
+# ----------------------------- updates --------------------------------------
+
+def _adam_update(g, m, v, step, cfg: OptConfig):
+    m = cfg.beta1 * m + (1 - cfg.beta1) * g
+    v = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+    mh = m / (1 - cfg.beta1 ** (step + 1))
+    vh = v / (1 - cfg.beta2 ** (step + 1))
+    upd = mh / (jnp.sqrt(vh) + cfg.eps)
+    return upd, m, v
+
+
+def apply_gradients(params: Tree, grads: Tree, state: Tree, step: jax.Array,
+                    cfg: OptConfig) -> tuple[Tree, Tree]:
+    """One optimizer step.  Returns (new params, new state)."""
+    grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = lr_at(step, cfg)
+
+    if cfg.name == "adamw":
+        def upd(p, g, m, v):
+            u, m2, v2 = _adam_update(g, m, v, step, cfg)
+            p2 = (p.astype(jnp.float32)
+                  - lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+            return p2.astype(p.dtype), m2, v2
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        p2 = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        m2 = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        v2 = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return p2, {"m": m2, "v": v2}
+
+    if cfg.name == "adamw8bit":
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for p, g, mq, vq in zip(flat_p, flat_g, flat_m, flat_v):
+            m = _dq8(mq["q"], mq["s"], p.shape)
+            v = _dq8(vq["q"], vq["s"], p.shape)
+            u, m2, v2 = _adam_update(g, m, v, step, cfg)
+            p2 = (p.astype(jnp.float32)
+                  - lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+            q_m, s_m = _q8(m2)
+            q_v, s_v = _q8(v2)
+            new_p.append(p2.astype(p.dtype))
+            new_m.append({"q": q_m, "s": s_m})
+            new_v.append({"q": q_v, "s": s_v})
+        return (jax.tree.unflatten(treedef, new_p),
+                {"m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v)})
+
+    if cfg.name == "adafactor":
+        def upd(p, g, fac):
+            g2 = g * g + 1e-30
+            if p.ndim >= 2:
+                row = cfg.beta2 * fac["row"] + (1 - cfg.beta2) * g2.mean(-1)
+                col = cfg.beta2 * fac["col"] + (1 - cfg.beta2) * g2.mean(-2)
+                vhat = (row[..., None] * col[..., None, :]
+                        / jnp.maximum(row.mean(-1, keepdims=True)[..., None],
+                                      1e-30))
+                new_fac = {"row": row, "col": col}
+            else:
+                v = cfg.beta2 * fac["v"] + (1 - cfg.beta2) * g2
+                vhat, new_fac = v, {"v": v}
+            u = g / jnp.maximum(jnp.sqrt(vhat), cfg.eps)
+            # update clipping (adafactor RMS rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            p2 = (p.astype(jnp.float32)
+                  - lr * (u + cfg.weight_decay * p.astype(jnp.float32)))
+            return p2.astype(p.dtype), new_fac
+        out = jax.tree.map(upd, params, grads, state["fac"],
+                           is_leaf=lambda t: isinstance(t, dict) and
+                           ("row" in t or "v" in t))
+        p2 = jax.tree.map(lambda t: t[0], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        f2 = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return p2, {"fac": f2}
+
+    raise ValueError(cfg.name)
+
+
+def opt_state_specs(param_specs: Tree, cfg: OptConfig) -> Tree:
+    """Sharding specs for optimizer state mirroring the param specs."""
+    as_tuple = lambda s: tuple(s)
+    if cfg.name == "adamw":
+        return {"m": param_specs, "v": param_specs}
+    if cfg.name == "adamw8bit":
+        # q is shape-preserving -> the param's spec; the per-row scale drops
+        # the last axis
+        from repro.parallel import ctx
+        q = ctx.map_specs(
+            lambda s: {"q": tuple(s),
+                       "s": tuple(s)[:-1] if len(s) > 0 else ()},
+            param_specs)
+        return {"m": q, "v": q}
+    if cfg.name == "adafactor":
+        def fac(s):
+            s = tuple(s)
+            if len(s) >= 2:
+                return {"row": s[:-1], "col": s[:-2] + s[-1:]}
+            return {"v": s}
+        return {"fac": jax.tree.map(fac, param_specs,
+                                    is_leaf=lambda s: isinstance(s, tuple))}
+    raise ValueError(cfg.name)

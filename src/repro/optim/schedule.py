@@ -1,0 +1,15 @@
+"""Learning-rate schedules (warmup + cosine decay)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_at(step, cfg) -> jnp.ndarray:
+    """Linear warmup to cfg.lr, then cosine decay to min_lr_ratio*lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    floor = cfg.min_lr_ratio
+    return cfg.lr * warm * (floor + (1 - floor) * cos)

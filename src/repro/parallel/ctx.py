@@ -1,0 +1,100 @@
+"""Parallel context: the active mesh + logical-axis resolution.
+
+Model code never names physical mesh axes; it requests logical axes
+("fsdp", "tp", "dp", "sp") which resolve against the active mesh set by the
+launcher.  With no active mesh every helper is a no-op, so the same model
+code runs single-device (smoke tests) and on the production mesh (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_MESH: Mesh | None = None
+
+# logical -> physical axis mapping (pod axis folds into data-parallel/FSDP)
+LOGICAL = {
+    "dp": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "sp": ("pod", "data"),   # sequence sharding reuses the data axis
+    "tp": ("model",),
+}
+
+
+def set_mesh(mesh: Mesh | None) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Mesh | None:
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    old = get_mesh()
+    set_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_mesh(old)
+
+
+def resolve_axis(logical: str | None) -> Any:
+    """Logical axis -> physical axis (subset present in the active mesh)."""
+    mesh = get_mesh()
+    if logical is None or mesh is None:
+        return None
+    phys = tuple(a for a in LOGICAL.get(logical, (logical,))
+                 if a in mesh.axis_names)
+    if not phys:
+        return None
+    return phys if len(phys) > 1 else phys[0]
+
+
+def is_logical_spec(s) -> bool:
+    """True for a PLAIN tuple of axis names/None (NamedTuples like SSMState
+    are containers, not specs — ``type(s) is tuple`` excludes them)."""
+    return (type(s) is tuple
+            and all(e is None or isinstance(e, str) for e in s))
+
+
+def map_specs(fn, spec_tree):
+    """tree.map over a logical-spec tree (spec tuples are the leaves)."""
+    import jax
+    return jax.tree.map(fn, spec_tree, is_leaf=is_logical_spec)
+
+
+def resolve_spec(logical_spec: tuple) -> P:
+    return P(*(resolve_axis(a) for a in logical_spec))
+
+
+def named_sharding(logical_spec: tuple) -> NamedSharding | None:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(logical_spec))
+
+
+def shard(x: jax.Array, *logical_spec) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without)."""
+    ns = named_sharding(tuple(logical_spec))
+    if ns is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ns)
+
+
+def axis_size(logical: str) -> int:
+    mesh = get_mesh()
+    if mesh is None:
+        return 1
+    phys = LOGICAL.get(logical, (logical,))
+    n = 1
+    for a in phys:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

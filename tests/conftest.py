@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+single device; distributed tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run python code in a subprocess with N fake XLA host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-W", "ignore", "-c", code],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a REDUCED
+config of the same family and runs forward + one train step on CPU,
+asserting output shapes and the absence of NaNs (task deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as B
+from repro.launch import steps as ST
+from repro.models import model as M
+from repro.optim import OptConfig, init_opt_state
+
+
+@pytest.mark.parametrize("arch_id", B.ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch_id):
+    mod = B.get_arch(arch_id)
+    cfg: B.ModelConfig = mod.reduced()
+    assert cfg.n_layers % len(cfg.period) == 0
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    Bsz, S = 2, 32
+    if cfg.frontend == "audio":
+        toks = jax.random.randint(key, (Bsz, S, cfg.n_codebooks), 0,
+                                  cfg.vocab)
+    else:
+        toks = jax.random.randint(key, (Bsz, S), 0, cfg.vocab)
+    img = (jax.random.normal(key, (Bsz, cfg.n_img_tokens, cfg.d_model))
+           if cfg.frontend == "vision" else None)
+
+    logits, aux = M.forward_train(params, toks, cfg, image_embeds=img)
+    if cfg.frontend == "audio":
+        assert logits.shape == (Bsz, S, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (Bsz, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one full train step (loss + grads + optimizer update)
+    opt_cfg = OptConfig(name=getattr(mod, "OPTIMIZER", "adamw"),
+                        total_steps=10)
+    opt_state = init_opt_state(params, opt_cfg)
+    step = ST.make_train_step(cfg, opt_cfg)
+    batch = {"tokens": toks, "targets": toks}
+    if img is not None:
+        batch["image_embeds"] = img
+    params2, opt2, metrics = step(params, opt_state, batch, jnp.int32(0))
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # parameters must actually change
+    delta = max(float(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)).max())
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch_id", ["mamba2_1_3b", "jamba_1_5_large_398b",
+                                     "musicgen_large",
+                                     "llama3_2_vision_11b"])
+def test_arch_smoke_decode_consistency(arch_id):
+    """prefill + decode_step equals full forward at the last position."""
+    mod = B.get_arch(arch_id)
+    cfg: B.ModelConfig = mod.reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    Bsz, S = 2, 24
+    if cfg.frontend == "audio":
+        toks = jax.random.randint(key, (Bsz, S, cfg.n_codebooks), 0,
+                                  cfg.vocab)
+    else:
+        toks = jax.random.randint(key, (Bsz, S), 0, cfg.vocab)
+    img = (jax.random.normal(key, (Bsz, cfg.n_img_tokens, cfg.d_model))
+           if cfg.frontend == "vision" else None)
+    logits, _ = M.forward_train(params, toks, cfg, image_embeds=img)
+    _, cache = M.prefill(params, toks[:, :S - 1], cfg, max_len=S,
+                         image_embeds=img)
+    pos = jnp.full((Bsz,), S - 1, jnp.int32)
+    logits_d, _ = M.decode_step(params, cache, toks[:, S - 1:], pos, cfg)
+    err = np.abs(np.asarray(logits_d[:, 0], np.float32) -
+                 np.asarray(logits[:, S - 1], np.float32)).max()
+    assert err < 1e-3, (arch_id, err)
+
+
+def test_full_configs_match_assignment_table():
+    """The FULL configs must carry the exact assigned hyperparameters."""
+    want = {
+        "mamba2_1_3b": dict(n_layers=48, d_model=2048, vocab=50280),
+        "phi4_mini_3_8b": dict(n_layers=32, d_model=3072, n_heads=24,
+                               n_kv_heads=8, d_ff=8192, vocab=200064),
+        "stablelm_1_6b": dict(n_layers=24, d_model=2048, n_heads=32,
+                              n_kv_heads=32, d_ff=5632, vocab=100352),
+        "stablelm_12b": dict(n_layers=40, d_model=5120, n_heads=32,
+                             n_kv_heads=8, d_ff=13824, vocab=100352),
+        "llama3_2_1b": dict(n_layers=16, d_model=2048, n_heads=32,
+                            n_kv_heads=8, d_ff=8192, vocab=128256),
+        "qwen3_moe_30b_a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                                  n_kv_heads=4, vocab=151936),
+        "kimi_k2_1t_a32b": dict(n_layers=61, d_model=7168, n_heads=64,
+                                n_kv_heads=8, vocab=163840),
+        "jamba_1_5_large_398b": dict(n_layers=72, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=24576, vocab=65536),
+        "llama3_2_vision_11b": dict(n_layers=40, d_model=4096, n_heads=32,
+                                    n_kv_heads=8, d_ff=14336, vocab=128256),
+        "musicgen_large": dict(n_layers=48, d_model=2048, n_heads=32,
+                               n_kv_heads=32, d_ff=8192, vocab=2048),
+    }
+    for arch, fields in want.items():
+        cfg = B.get_arch(arch).CONFIG
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # MoE structure
+    assert B.get_arch("qwen3_moe_30b_a3b").CONFIG.moe.n_experts == 128
+    assert B.get_arch("qwen3_moe_30b_a3b").CONFIG.moe.top_k == 8
+    assert B.get_arch("kimi_k2_1t_a32b").CONFIG.moe.n_experts == 384
+    assert B.get_arch("jamba_1_5_large_398b").CONFIG.moe.n_experts == 16
+    assert B.get_arch("jamba_1_5_large_398b").CONFIG.moe.top_k == 2
+    assert B.get_arch("mamba2_1_3b").CONFIG.ssm.d_state == 128
+    # jamba 1:7 attention ratio in the period
+    period = B.get_arch("jamba_1_5_large_398b").CONFIG.period
+    assert sum(1 for s in period if s.kind == "attn") == 1
+    assert len(period) == 8
+    # musicgen codebooks
+    assert B.get_arch("musicgen_large").CONFIG.n_codebooks == 4
+
+
+def test_param_counts_in_expected_range():
+    """Abstract param counts should be near the advertised model sizes."""
+    expect = {"llama3_2_1b": (1.0e9, 1.8e9),
+              "phi4_mini_3_8b": (3.0e9, 4.6e9),
+              "stablelm_1_6b": (1.2e9, 2.1e9),
+              "stablelm_12b": (10e9, 14e9),
+              "qwen3_moe_30b_a3b": (25e9, 34e9),
+              "kimi_k2_1t_a32b": (0.9e12, 1.15e12),
+              "jamba_1_5_large_398b": (330e9, 430e9),
+              "mamba2_1_3b": (1.0e9, 1.6e9),
+              "musicgen_large": (1.4e9, 2.6e9),
+              "llama3_2_vision_11b": (8.5e9, 12e9)}
+    for arch, (lo, hi) in expect.items():
+        cfg = B.get_arch(arch).CONFIG
+        sds = ST.abstract_params(cfg)
+        n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(sds))
+        assert lo <= n <= hi, (arch, f"{n:.3e}", lo, hi)

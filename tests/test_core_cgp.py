@@ -1,0 +1,189 @@
+"""Core CGP engine: gates, genomes, golden circuits, simulation, metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gates, golden as G, metrics as M, simulate as S
+from repro.core.genome import (CGPSpec, Genome, active_mask, critical_path_ps,
+                               random_genome, validate_genome)
+from repro.core.mutate import mutate
+from repro.core.power import circuit_cost_from_probs
+
+
+# ----------------------------- gates ----------------------------------------
+
+def test_truth_tables_match_python_semantics():
+    a = np.array([0, 1, 0, 1], dtype=np.int32)
+    b = np.array([0, 0, 1, 1], dtype=np.int32)
+    expect = {
+        gates.BUF: a, gates.INV: 1 - a, gates.AND: a & b, gates.OR: a | b,
+        gates.XOR: a ^ b, gates.NAND: 1 - (a & b), gates.NOR: 1 - (a | b),
+        gates.XNOR: 1 - (a ^ b),
+    }
+    for f, want in expect.items():
+        tt = gates.TRUTH_TABLES[f]
+        got = (tt >> (a + 2 * b)) & 1
+        assert (got == want).all(), gates.GATE_NAMES[f]
+
+
+def test_tt_packed_consistent():
+    for f in range(gates.N_FUNCS):
+        assert (gates.TT_PACKED >> (4 * f)) & 0xF == gates.TRUTH_TABLES[f]
+
+
+# ----------------------------- golden circuits ------------------------------
+
+@pytest.mark.parametrize("width", [2, 3, 4, 6, 8])
+def test_array_multiplier_exact(width):
+    g, spec = G.array_multiplier(width)
+    vals = np.asarray(S.simulate_values(g, spec))
+    assert (vals == G.golden_values(width, "mul")).all()
+
+
+@pytest.mark.parametrize("width", [2, 3, 5, 8])
+def test_ripple_adder_exact(width):
+    g, spec = G.ripple_carry_adder(width)
+    vals = np.asarray(S.simulate_values(g, spec))
+    assert (vals == G.golden_values(width, "add")).all()
+
+
+def test_packed_sim_matches_numpy_oracle():
+    spec = CGPSpec(n_i=8, n_o=8, n_n=60)
+    for seed in range(5):
+        g = random_genome(jax.random.PRNGKey(seed), spec)
+        jv = np.asarray(S.simulate_values(g, spec))
+        nv = S.simulate_values_np(g, spec)
+        assert (jv == nv).all(), seed
+
+
+# ----------------------------- metrics --------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 10))
+@settings(max_examples=30, deadline=None)
+def test_metrics_match_numpy_oracle(seed, n_o):
+    rng = np.random.default_rng(seed)
+    n = 128
+    hi = 1 << n_o
+    g = rng.integers(0, hi, n).astype(np.int32)
+    c = rng.integers(0, hi, n).astype(np.int32)
+    got = np.asarray(M.metrics_from_values(jnp.asarray(g), jnp.asarray(c),
+                                           n_o, gauss_sigma=16.0))
+    want = M.metrics_np(g, c, n_o, gauss_sigma=16.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_metric_invariants(seed):
+    rng = np.random.default_rng(seed)
+    g = rng.integers(0, 256, 64).astype(np.int32)
+    c = rng.integers(0, 256, 64).astype(np.int32)
+    m = np.asarray(M.metrics_from_values(jnp.asarray(g), jnp.asarray(c), 8))
+    assert m[M.MAE] <= m[M.WCE] + 1e-5          # mean |e| <= max |e|
+    assert 0.0 <= m[M.ER] <= 100.0
+    assert m[M.AVG] <= m[M.MAE] + 1e-5          # |mean e| <= mean |e|
+    if (g == c).all():
+        assert m[M.ER] == 0 and m[M.WCE] == 0
+
+
+def test_metrics_zero_for_identical():
+    g = np.arange(256, dtype=np.int32)
+    m = np.asarray(M.metrics_from_values(jnp.asarray(g), jnp.asarray(g), 8))
+    assert (m[:5] == 0).all() and m[M.ACC0] == 1 and m[M.GAUSS] == 1
+
+
+def test_acc0_detects_violation():
+    g = np.zeros(64, dtype=np.int32)
+    c = np.zeros(64, dtype=np.int32)
+    c[3] = 7
+    m = np.asarray(M.metrics_from_values(jnp.asarray(g), jnp.asarray(c), 8))
+    assert m[M.ACC0] == 0
+
+
+def test_gauss_envelope():
+    """Paper Eq. (7): the error histogram (zeros excluded, scaled to all 2^n
+    inputs) must stay below the N(0,σ) envelope — so only a SMALL set of
+    inputs may carry errors, and large errors only in Gaussian-tail numbers."""
+    rng = np.random.default_rng(0)
+    n = 4096
+    g = rng.integers(100, 200, n).astype(np.int32)
+    # 10% of inputs carry small gaussian errors -> fits the sigma=16 envelope
+    c = g.copy()
+    idx = rng.choice(n, n // 10, replace=False)
+    c[idx] = (g[idx] - np.clip(rng.normal(0, 4, idx.size).round(),
+                               -40, 40)).astype(np.int32)
+    m = np.asarray(M.metrics_from_values(jnp.asarray(g), jnp.asarray(c), 8,
+                                         gauss_sigma=16.0))
+    assert m[M.GAUSS] == 1
+    # errors on EVERY input must violate (center bins exceed envelope mass)
+    c2 = (g + rng.integers(1, 8, n)).astype(np.int32)
+    m2 = np.asarray(M.metrics_from_values(jnp.asarray(g), jnp.asarray(c2), 8,
+                                          gauss_sigma=4.0))
+    assert m2[M.GAUSS] == 0
+
+
+# ----------------------------- genome ops -----------------------------------
+
+def test_active_mask_vs_bruteforce():
+    spec = CGPSpec(n_i=6, n_o=4, n_n=40)
+    for seed in range(5):
+        g = random_genome(jax.random.PRNGKey(seed), spec)
+        got = np.asarray(active_mask(g, spec))
+        nodes = np.asarray(g.nodes)
+        outs = np.asarray(g.outs)
+        want = np.zeros(spec.n_wires, bool)
+        stack = list(outs)
+        while stack:
+            w = stack.pop()
+            if want[w]:
+                continue
+            want[w] = True
+            if w >= spec.n_i:
+                a, b, f = nodes[w - spec.n_i]
+                stack.append(int(a))
+                if not gates.ONE_INPUT[f]:
+                    stack.append(int(b))
+        assert (got == want).all(), seed
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.01, 0.5))
+@settings(max_examples=25, deadline=None)
+def test_mutation_preserves_legality(seed, rate):
+    spec = CGPSpec(n_i=8, n_o=8, n_n=30)
+    key = jax.random.PRNGKey(seed)
+    g = random_genome(key, spec)
+    for i in range(3):
+        g = mutate(jax.random.fold_in(key, i), g, spec, rate)
+    assert validate_genome(g, spec)
+
+
+def test_critical_path_positive_and_monotone():
+    g, spec = G.array_multiplier(4)
+    d_mult = float(critical_path_ps(g, spec))
+    a, spec_a = G.ripple_carry_adder(4)
+    d_add = float(critical_path_ps(a, spec_a))
+    assert d_mult > d_add > 0  # multiplier is deeper than adder
+
+
+# ----------------------------- power model ----------------------------------
+
+def test_power_drops_when_outputs_truncated():
+    g, spec = G.array_multiplier(4)
+    planes = S.input_planes(spec.n_i)
+    wires = S.simulate_planes(g, spec, planes)
+    probs = S.signal_probabilities(wires[spec.n_i:], spec.n_inputs_total)
+    full = circuit_cost_from_probs(g, spec, probs)
+    # truncate: lowest two outputs wired to a constant-0 node -> fewer active
+    import jax.numpy as jnp
+    nodes = g.nodes
+    const0_idx = spec.n_i  # node 0 made XOR(in0,in0) = 0
+    nodes = nodes.at[0].set(jnp.asarray([0, 0, gates.XOR], jnp.int32))
+    trunc = Genome(nodes, g.outs.at[0].set(const0_idx).at[1].set(const0_idx))
+    wires_t = S.simulate_planes(trunc, spec, planes)
+    probs_t = S.signal_probabilities(wires_t[spec.n_i:], spec.n_inputs_total)
+    cut = circuit_cost_from_probs(trunc, spec, probs_t)
+    assert float(cut.power) < float(full.power)
+    assert int(cut.n_active) < int(full.n_active)
+    assert float(cut.area) < float(full.area)

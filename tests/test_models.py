@@ -1,0 +1,261 @@
+"""Model-layer correctness: attention variants, SSD scan, MoE, quant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (LayerSpec, ModelConfig, MoEConfig, SSMConfig)
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import quant
+from repro.models.layers import rms_norm
+
+
+# ----------------------------- attention ------------------------------------
+
+@pytest.mark.parametrize("shape", [(2, 48, 4, 2, 16), (1, 130, 8, 8, 8),
+                                   (3, 33, 4, 1, 32)])
+def test_blocked_attention_matches_naive(shape):
+    B, S, H, Hkv, D = shape
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D))
+    got = A.blocked_attention(q, k, v, causal=True, block_q=16, block_kv=16)
+    want = A.naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_attention_q_offset_decodes_suffix():
+    B, S, H, D = 1, 32, 2, 8
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D))
+    full = A.blocked_attention(q, k, v, causal=True, block_q=8, block_kv=8)
+    # last 8 queries with offset should equal the tail of the full result
+    tail = A.blocked_attention(q[:, -8:], k, v, causal=True, block_q=8,
+                               block_kv=8, q_offset=S - 8)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, -8:]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_split_kv_decode_matches_single_shard():
+    """The flash-decoding LSE merge must equal ordinary decode attention."""
+    cfg = ModelConfig(n_layers=1, d_model=32, n_heads=4, n_kv_heads=2,
+                      vocab=64)
+    key = jax.random.PRNGKey(0)
+    params = A.init_attention(key, cfg)
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, 1, 32))
+    kc = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 2, cfg.hd))
+    vc = jax.random.normal(jax.random.fold_in(key, 3), (B, S, 2, cfg.hd))
+    pos = jnp.asarray([40, 50], jnp.int32)
+    out_ref, _, _ = A.decode_self_attention(params, x, kc, vc, pos, cfg)
+
+    # emulate 4 sequence shards with vmap over a fake axis
+    n_sh = 4
+    S_l = S // n_sh
+    kc_s = kc.reshape(B, n_sh, S_l, 2, cfg.hd).transpose(1, 0, 2, 3, 4)
+    vc_s = vc.reshape(B, n_sh, S_l, 2, cfg.hd).transpose(1, 0, 2, 3, 4)
+
+    def per_shard(k_l, v_l, shard):
+        local_pos = pos - shard * S_l
+        gpos = jnp.arange(S_l)[None, :] + shard * S_l
+        valid = gpos <= pos[:, None]
+        h = rms_norm(x, params["norm"], cfg.norm_eps)
+        from repro.models.layers import rope_angles, apply_rope, matmul
+        q = matmul(h, params["wq"], cfg).reshape(B, 1, cfg.n_heads, cfg.hd)
+        sin, cos = rope_angles(pos[:, None], cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        return A._partial_decode_attn(q, k_l, v_l, valid, cfg)
+
+    ms, ls, os_ = [], [], []
+    for sh in range(n_sh):
+        # shard sh does NOT contain the new token here; emulate read-only
+        m, l, o = per_shard(kc_s[sh], vc_s[sh], sh)
+        ms.append(m), ls.append(l), os_.append(o)
+    m_g = jnp.max(jnp.stack(ms), axis=0)
+    w = [jnp.exp(m - m_g) for m in ms]
+    l_g = sum(l * wi for l, wi in zip(ls, w))
+    o_g = sum(o * wi[..., None] for o, wi in zip(os_, w)) / \
+        jnp.maximum(l_g, 1e-30)[..., None]
+    # compare with the reference path's internal attention (pre-wo):
+    # instead compare END-TO-END by re-projecting
+    from repro.models.layers import matmul as mm
+    out_merge = x + mm(o_g.transpose(0, 2, 1, 3).reshape(B, 1, -1),
+                       params["wo"], cfg)
+    # reference did cache update (writes new token at pos) — our emulation
+    # skipped the write, so rebuild reference without update:
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    from repro.models.layers import rope_angles, apply_rope
+    q = mm(h, params["wq"], cfg).reshape(B, 1, cfg.n_heads, cfg.hd)
+    sin, cos = rope_angles(pos[:, None], cfg.hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    valid_full = jnp.arange(S)[None, :] <= pos[:, None]
+    att = A._masked_decode_attn(q, kc, vc, valid_full, cfg)
+    out_direct = x + mm(att.reshape(B, 1, -1), params["wo"], cfg)
+    np.testing.assert_allclose(np.asarray(out_merge), np.asarray(out_direct),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------- SSD / mamba2 ---------------------------------
+
+def _naive_ssd(xh, dt, Av, Bm, Cm):
+    """Direct per-step recurrence oracle (float64-free, fp32)."""
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    state = np.zeros((Bsz, H, P, N), np.float32)
+    ys = np.zeros((Bsz, S, H, P), np.float32)
+    for t in range(S):
+        dA = np.exp(dt[:, t] * Av[None, :])              # (B, H)
+        Bh = np.repeat(Bm[:, t], rep, axis=1)            # (B, H, N)
+        Ch = np.repeat(Cm[:, t], rep, axis=1)
+        state = state * dA[:, :, None, None] + \
+            np.einsum("bh,bhp,bhn->bhpn", dt[:, t], xh[:, t], Bh)
+        ys[:, t] = np.einsum("bhn,bhpn->bhp", Ch, state)
+    return ys, state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_naive_recurrence(chunk):
+    rng = np.random.default_rng(0)
+    B, S, H, P, G, N = 2, 24, 4, 8, 2, 16
+    xh = rng.normal(size=(B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, size=(B, S, H)).astype(np.float32)
+    Av = -rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32)
+    Bm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+    Cm = rng.normal(size=(B, S, G, N)).astype(np.float32)
+    y, state = SSM._ssd_chunked(jnp.asarray(xh), jnp.asarray(dt),
+                                jnp.asarray(Av), jnp.asarray(Bm),
+                                jnp.asarray(Cm), chunk)
+    y_ref, state_ref = _naive_ssd(xh, dt, Av, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), state_ref, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    rng = np.random.default_rng(1)
+    B, S, H, P, G, N = 1, 32, 2, 4, 1, 8
+    args = (jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32)),
+            jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)).astype(np.float32)),
+            jnp.asarray(-rng.uniform(0.5, 2, (H,)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(B, S, G, N)).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(B, S, G, N)).astype(np.float32)))
+    y1, s1 = SSM._ssd_chunked(*args, 4)
+    y2, s2 = SSM._ssd_chunked(*args, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssm_decode_matches_forward():
+    cfg = ModelConfig(n_layers=1, d_model=32, n_heads=4, n_kv_heads=4,
+                      vocab=64, period=(LayerSpec(kind="ssm",
+                                                  has_ffn=False),),
+                      ssm=SSMConfig(d_state=8, headdim=8, chunk=8,
+                                    conv_width=3))
+    key = jax.random.PRNGKey(0)
+    params = SSM.init_ssm(key, cfg)
+    B, S = 2, 17
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 32))
+    full, _ = SSM.ssm_forward(params, x, cfg)
+    # step-by-step decode
+    state = SSM.init_ssm_state(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, state = SSM.ssm_decode_step(params, x[:, t:t + 1], state, cfg)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------- MoE -------------------------------------------
+
+def test_moe_full_capacity_matches_dense_oracle():
+    cfg = ModelConfig(n_layers=1, d_model=16, vocab=8,
+                      moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=8))
+    key = jax.random.PRNGKey(0)
+    params = MOE.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 6, 16))
+    out, aux = MOE.moe_ffn(params, x, cfg, full_capacity=True)
+
+    # oracle: per-token dense computation of the top-k experts
+    h = np.asarray(rms_norm(x, params["norm"], cfg.norm_eps)).reshape(-1, 16)
+    router = np.asarray(params["router"], np.float32)
+    probs = jax.nn.softmax(jnp.asarray(h @ router), axis=-1)
+    w, ids = jax.lax.top_k(probs, 2)
+    w = np.asarray(w / w.sum(-1, keepdims=True))
+    ids = np.asarray(ids)
+    wg = np.asarray(params["w_gate"], np.float32)
+    wu = np.asarray(params["w_up"], np.float32)
+    wd = np.asarray(params["w_down"], np.float32)
+
+    def expert(e, t):
+        gate = h[t] @ wg[e]
+        up = h[t] @ wu[e]
+        inner = gate / (1 + np.exp(-gate)) * up
+        return inner @ wd[e]
+
+    want = np.zeros_like(h)
+    for t in range(h.shape[0]):
+        for j in range(2):
+            want[t] += w[t, j] * expert(ids[t, j], t)
+    got = np.asarray(out - x).reshape(-1, 16)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = ModelConfig(n_layers=1, d_model=16, vocab=8,
+                      moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=8,
+                                    capacity_factor=0.25))
+    key = jax.random.PRNGKey(0)
+    params = MOE.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, 16))
+    out_drop, _ = MOE.moe_ffn(params, x, cfg)
+    out_full, _ = MOE.moe_ffn(params, x, cfg, full_capacity=True)
+    # capacity 0.25 must actually change (drop) some outputs
+    assert np.abs(np.asarray(out_drop - out_full)).max() > 1e-6
+
+
+# ----------------------------- quant / approx --------------------------------
+
+def test_approx_matmul_exact_lut_close_to_fp():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 64))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (64, 16))
+    err = quant.quant_error(x, w, None)  # exact multiplier LUT
+    assert err < 0.02, err  # only uint8 quantization noise remains
+
+
+def test_approx_matmul_zero_point_correction_is_exact():
+    """With the exact LUT the emulation must equal integer math exactly."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (8, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 4))
+    qx, sx, zx = quant.quantize_u8(x.reshape(-1, 32))
+    qw, sw, zw = quant.quantize_u8(w)
+    want = (sx * sw * ((np.asarray(qx, np.int64) - float(zx)) @
+                       (np.asarray(qw, np.int64) - float(zw))))
+    got = quant.approx_matmul(x, w, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_approx_matmul_with_noisy_lut_degrades_gracefully():
+    rng = np.random.default_rng(0)
+    exact = quant.get_multiplier_lut()
+    noisy = np.asarray(exact) + rng.integers(-64, 64, (256, 256))
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (16, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 8))
+    e_exact = quant.quant_error(x, w, None)
+    e_noisy = quant.quant_error(x, w, jnp.asarray(noisy))
+    assert e_noisy > e_exact

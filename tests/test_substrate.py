@@ -1,0 +1,230 @@
+"""Substrate: data pipeline, optimizers, checkpointing, fault runtime."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, PrefetchLoader, pack_documents, synth_batch
+from repro.optim import OptConfig, apply_gradients, init_opt_state
+from repro.optim.schedule import lr_at
+from repro.optim import compress
+from repro.runtime.fault import (HeartbeatMonitor, StragglerDetector,
+                                 TrainGuard, retry)
+
+
+# ----------------------------- data -----------------------------------------
+
+def test_synth_batch_deterministic():
+    cfg = DataConfig(vocab=1000, seq_len=16, global_batch=4, seed=7)
+    a = synth_batch(cfg, 3)
+    b = synth_batch(cfg, 3)
+    assert (a["tokens"] == b["tokens"]).all()
+    c = synth_batch(cfg, 4)
+    assert (a["tokens"] != c["tokens"]).any()          # steps differ
+    d = synth_batch(DataConfig(vocab=1000, seq_len=16, global_batch=4,
+                               seed=8), 3)
+    assert (a["tokens"] != d["tokens"]).any()          # seeds differ
+
+
+def test_synth_batch_host_slice_consistent():
+    cfg = DataConfig(vocab=512, seq_len=8, global_batch=8)
+    full = synth_batch(cfg, 0)["tokens"]
+    part = synth_batch(cfg, 0, host_slice=slice(2, 5))["tokens"]
+    assert (part == full[2:5]).all()
+
+
+def test_synth_batch_zipf_shape_and_range():
+    cfg = DataConfig(vocab=128, seq_len=64, global_batch=4, n_codebooks=4)
+    b = synth_batch(cfg, 0)
+    assert b["tokens"].shape == (4, 64, 4)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 128
+    # zipf-ish: low ids should dominate
+    counts = np.bincount(b["tokens"].reshape(-1), minlength=128)
+    assert counts[:16].sum() > counts[64:].sum()
+
+
+def test_prefetch_loader():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2)
+    loader = PrefetchLoader(cfg, start_step=0)
+    b0 = next(loader)
+    b1 = next(loader)
+    loader.close()
+    assert (b0["tokens"] == synth_batch(cfg, 0)["tokens"]).all()
+    assert (b1["tokens"] == synth_batch(cfg, 1)["tokens"]).all()
+
+
+@given(st.lists(st.lists(st.integers(0, 250), min_size=0, max_size=40),
+                min_size=1, max_size=10),
+       st.integers(4, 32))
+@settings(max_examples=25, deadline=None)
+def test_pack_documents_preserves_stream(docs, seq_len):
+    eos = 255
+    out = pack_documents(docs, seq_len, eos)
+    flat = []
+    for d in docs:
+        flat.extend(d)
+        flat.append(eos)
+    got = out.reshape(-1)[:len(flat)]
+    assert (got == np.asarray(flat, np.int32)[:got.size]).all()
+    assert out.shape[1] == seq_len
+
+
+# ----------------------------- optimizers -----------------------------------
+
+def _quadratic_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return params, loss_fn, target
+
+
+@pytest.mark.parametrize("name", ["adamw", "adamw8bit", "adafactor"])
+def test_optimizers_descend_quadratic(name):
+    params, loss_fn, target = _quadratic_problem()
+    cfg = OptConfig(name=name, lr=0.05, weight_decay=0.0, warmup_steps=1,
+                    total_steps=200)
+    state = init_opt_state(params, cfg)
+    l0 = float(loss_fn(params))
+    for s in range(60):
+        grads = jax.grad(loss_fn)(params)
+        params, state = apply_gradients(params, grads, state, jnp.int32(s),
+                                        cfg)
+    assert float(loss_fn(params)) < 0.2 * l0, name
+
+
+def test_adamw8bit_tracks_fp_adamw():
+    params, loss_fn, _ = _quadratic_problem()
+    cfg_a = OptConfig(name="adamw", lr=0.05, weight_decay=0.0,
+                      warmup_steps=1, total_steps=100)
+    cfg_b = OptConfig(name="adamw8bit", lr=0.05, weight_decay=0.0,
+                      warmup_steps=1, total_steps=100)
+    pa, sa = dict(params), init_opt_state(params, cfg_a)
+    pb, sb = dict(params), init_opt_state(params, cfg_b)
+    for s in range(20):
+        ga = jax.grad(loss_fn)(pa)
+        gb = jax.grad(loss_fn)(pb)
+        pa, sa = apply_gradients(pa, ga, sa, jnp.int32(s), cfg_a)
+        pb, sb = apply_gradients(pb, gb, sb, jnp.int32(s), cfg_b)
+    # 8-bit moments track the fp32 trajectory closely on a smooth problem
+    np.testing.assert_allclose(np.asarray(pb["w"]), np.asarray(pa["w"]),
+                               rtol=0.1, atol=0.05)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_ratio=0.1)
+    lrs = [float(lr_at(s, cfg)) for s in range(100)]
+    assert lrs[0] < 0.2                      # warmup starts low
+    assert abs(max(lrs) - 1.0) < 0.01        # reaches peak
+    assert lrs[-1] < 0.2                     # decays
+    assert lrs[-1] >= 0.099                  # floor respected
+
+
+def test_grad_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(300,)).astype(np.float32))}
+    err = compress.init_error(g_true)
+    acc = np.zeros(300, np.float32)
+    n = 50
+    for _ in range(n):
+        qt, err = compress.compress_with_feedback(g_true, err)
+        deq = compress.dequantize_leaf(qt["w"]["q"], qt["w"]["s"], (300,))
+        acc += np.asarray(deq)
+    # error feedback => time-average converges to the true gradient
+    np.testing.assert_allclose(acc / n, np.asarray(g_true["w"]),
+                               rtol=0.02, atol=0.005)
+
+
+# ----------------------------- checkpoint -----------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12).reshape(3, 4).astype(jnp.float32),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+    store.save_checkpoint(str(tmp_path), 7, tree, {"note": "x"})
+    assert store.latest_step(str(tmp_path)) == 7
+    out, meta = store.load_checkpoint(str(tmp_path), 7, tree)
+    assert meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_checkpoint_incomplete_ignored(tmp_path):
+    tree = {"a": jnp.ones((2,))}
+    p = store.save_checkpoint(str(tmp_path), 3, tree)
+    # simulate a torn write at step 5
+    os.makedirs(tmp_path / "step_00000005")
+    (tmp_path / "step_00000005" / "manifest.json").write_text("{}")
+    assert store.latest_step(str(tmp_path)) == 3
+
+
+def test_checkpoint_async_and_cleanup(tmp_path):
+    ck = store.AsyncCheckpointer()
+    tree = {"a": jnp.ones((4,))}
+    for s in (1, 2, 3, 4):
+        ck.save(str(tmp_path), s, tree)
+    ck.wait()
+    store.cleanup(str(tmp_path), keep=2)
+    assert store.latest_step(str(tmp_path)) == 4
+    remaining = sorted(os.listdir(tmp_path))
+    assert len([d for d in remaining if d.startswith("step_")]) == 2
+
+
+# ----------------------------- runtime --------------------------------------
+
+def test_heartbeat_deadline():
+    t = {"now": 0.0}
+    mon = HeartbeatMonitor(deadline_s=10.0, clock=lambda: t["now"])
+    mon.beat("h0")
+    mon.beat("h1")
+    t["now"] = 5.0
+    assert mon.dead_hosts() == []
+    t["now"] = 11.0
+    mon.beat("h1")
+    assert mon.dead_hosts() == ["h0"]
+
+
+def test_straggler_detection():
+    det = StragglerDetector(alpha=1.0, threshold=1.5, patience=2)
+    flagged = []
+    for step in range(5):
+        det.observe("fast0", 1.0)
+        det.observe("fast1", 1.1)
+        flagged = det.observe("slow", 3.0)
+    assert flagged == ["slow"]
+
+
+def test_retry_transient():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return 42
+
+    assert retry(flaky, retries=5, sleep=lambda s: None) == 42
+    assert calls["n"] == 3
+    with pytest.raises(OSError):
+        retry(lambda: (_ for _ in ()).throw(OSError("x")).__next__(),
+              retries=1, sleep=lambda s: None)
+
+
+def test_train_guard_integration():
+    t = {"now": 0.0}
+    failures = []
+    guard = TrainGuard(
+        HeartbeatMonitor(deadline_s=5.0, clock=lambda: t["now"]),
+        StragglerDetector(alpha=1.0, threshold=1.5, patience=1),
+        on_failure=failures.append)
+    guard.step("h0", 1.0)
+    status = guard.step("h1", 1.0)
+    assert status["dead"] == [] and status["stragglers"] == []

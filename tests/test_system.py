@@ -1,0 +1,134 @@
+"""End-to-end behaviour tests for the paper's system: evolve -> library ->
+deploy into an LM (approx matmul) -> train -> serve, plus launcher CLIs."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import REPO, SRC
+
+
+def _run_cli(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-W", "ignore", "-m"] + args,
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_end_to_end_evolve_deploy_train(tmp_path):
+    """The paper's full story in miniature: evolve an approximate multiplier
+    under combined constraints, deploy its LUT into a quantized matmul, and
+    check the model-level error stays bounded."""
+    from repro.core.evolve import EvolveConfig
+    from repro.core.fitness import ConstraintSpec
+    from repro.core.library import (load_library, multiplier_lut,
+                                    record_to_genome, save_library)
+    from repro.core.search import SearchConfig, run_search
+    from repro.core.genome import CGPSpec
+    from repro.models import quant
+
+    cfg = SearchConfig(width=8, n_n=400,
+                       evolve=EvolveConfig(generations=150, lam=6))
+    con = ConstraintSpec(mae=0.05, er=90.0)
+    rec, _ = run_search(cfg, con, seed=0)
+    assert rec.feasible
+    lib_path = str(tmp_path / "lib.json")
+    save_library([rec], lib_path)
+    lib = load_library(lib_path)
+    genome = record_to_genome(lib[0])
+    lut = multiplier_lut(genome, CGPSpec(16, 16, 400))
+    assert lut.shape == (256, 256)
+    # deploy: approximate matmul error bounded by quant error + circuit MAE
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (16, 32))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (32, 8))
+    err = quant.quant_error(x, w, jnp.asarray(lut))
+    # MAE<=0.05% of the output range keeps model-level relative error small
+    # (the search legitimately exploits looser MAE budgets into circuits
+    # whose *relative* matmul error on small-magnitude products is larger)
+    assert err < 0.25, err
+
+
+def test_train_cli_loss_decreases(tmp_path):
+    out = _run_cli(["repro.launch.train", "--arch", "llama3_2_1b",
+                    "--reduced", "--steps", "30", "--batch", "8",
+                    "--seq", "64", "--ckpt-dir", str(tmp_path / "ck")])
+    lines = [l for l in out.splitlines() if l.startswith("[train] step")]
+    first = float(lines[0].split("loss")[1].split()[0])
+    last = float(lines[-1].split("loss")[1].split()[0])
+    assert last < first, out
+
+
+def test_train_cli_resume_from_checkpoint(tmp_path):
+    ck = str(tmp_path / "ck")
+    _run_cli(["repro.launch.train", "--arch", "llama3_2_1b", "--reduced",
+              "--steps", "10", "--ckpt-every", "5", "--batch", "4",
+              "--seq", "32", "--ckpt-dir", ck])
+    out = _run_cli(["repro.launch.train", "--arch", "llama3_2_1b",
+                    "--reduced", "--steps", "15", "--ckpt-every", "5",
+                    "--batch", "4", "--seq", "32", "--ckpt-dir", ck])
+    assert "resumed from step 10" in out
+
+
+def test_serve_cli():
+    out = _run_cli(["repro.launch.serve", "--arch", "llama3_2_1b",
+                    "--reduced", "--requests", "4", "--prompt-len", "16",
+                    "--gen-len", "8", "--slots", "2"])
+    assert "tok/s" in out
+
+
+def test_evolve_cli(tmp_path):
+    out = _run_cli(["repro.launch.evolve", "--width", "4", "--nodes", "130",
+                    "--constraint", "mae=2.0,er=80", "--generations", "200",
+                    "--lam", "4", "--out", str(tmp_path / "lib.json")])
+    rec = json.loads([l for l in out.splitlines() if l.startswith("{")][0])
+    assert rec["feasible"]
+    assert rec["metrics"]["mae"] <= 2.0 + 1e-3
+    assert os.path.exists(tmp_path / "lib.json")
+
+
+def test_microbatched_train_step_matches_single():
+    from repro.configs.base import ModelConfig
+    from repro.launch import steps as ST
+    from repro.models import model as M
+    from repro.optim import OptConfig, init_opt_state
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                      d_ff=64, vocab=128)
+    opt_cfg = OptConfig(weight_decay=0.0)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    opt = init_opt_state(params, opt_cfg)
+    batch = {"tokens": jax.random.randint(key, (8, 16), 0, 128),
+             "targets": jax.random.randint(key, (8, 16), 0, 128)}
+    s1 = ST.make_train_step(cfg, opt_cfg, microbatches=1)
+    s4 = ST.make_train_step(cfg, opt_cfg, microbatches=4)
+    p1, _, m1 = s1(params, opt, batch, jnp.int32(0))
+    p4, _, m4 = s4(params, opt, batch, jnp.int32(0))
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-4
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_chunked_ce_matches_unchunked():
+    import dataclasses
+    from repro.configs.base import ModelConfig
+    from repro.models import model as M
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                      d_ff=64, vocab=128)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    toks = jax.random.randint(key, (4, 32), 0, 128)
+    l_full = float(M.lm_loss(params, toks, toks, cfg))
+    cfg_c = dataclasses.replace(cfg, loss_vocab_chunk=8)
+    l_chunk = float(M.lm_loss(params, toks, toks, cfg_c))
+    assert abs(l_full - l_chunk) < 1e-4
