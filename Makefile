@@ -1,0 +1,17 @@
+# Repo entry points (run from the repo root).
+#   make test        — tier-1 suite (the ROADMAP verify command)
+#   make test-fast   — tier-1 minus the slow multi-process tests
+#   make bench-smoke — quick benchmark pass: kernel micros + sweep engine
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test test-fast bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-smoke:
+	$(PY) benchmarks/kernel_micro.py --only sweep,gen

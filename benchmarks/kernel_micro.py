@@ -1,9 +1,18 @@
 """Kernel microbenchmarks: fused sim+metrics throughput (the paper's hot
-loop) and the unfused baseline, on this host (CPU: jnp path; the Pallas
-kernel is timed in interpret mode only for reference — its target is TPU)."""
+loop), the unfused baseline, and the batched constraint-grid sweep engine
+vs the serial per-run loop, on this host (CPU: jnp path; the Pallas kernel
+is timed in interpret mode only for reference — its target is TPU).
+
+Script mode:  python benchmarks/kernel_micro.py [--only eval,gen,pallas,sweep]
+"""
 from __future__ import annotations
 
+import os
+import sys
 import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
 
 import jax
 import jax.numpy as jnp
@@ -44,8 +53,7 @@ def bench_eval_throughput(width: int = 8, lam: int = 8):
             vals = S.simulate_values(g, spec, planes)       # pass 1
             met = M.metrics_from_values(gvals, vals, spec.n_o)  # pass 2
             wires = S.simulate_planes(g, spec, planes)      # re-sim for p
-            p = S.signal_probabilities(wires[spec.n_i:],
-                                       spec.n_inputs_total)
+            p = S.signal_probabilities(wires[spec.n_i:])
             return met, p
         return jax.vmap(one)(gs)
 
@@ -93,3 +101,66 @@ def bench_generation_rate(width: int = 8):
     return {"generations_per_s": 100 / dt,
             "evals_per_s": 100 * 8 / dt,
             "exhaustive_inputs_per_s": 100 * 8 * spec.n_inputs_total / dt}
+
+
+def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
+                n_seeds: int = 2):
+    """Constraint-grid throughput (runs/s): batched engine vs serial loop.
+
+    The grid is 6 constraint configs × ``n_seeds`` seeds; both paths are
+    compiled before timing, so the ratio isolates execution throughput (the
+    batched engine additionally saves one trace per seed on the cold path).
+    """
+    from repro.core.evolve import EvolveConfig
+    from repro.core.fitness import ConstraintSpec
+    from repro.core.search import SearchConfig, run_search, run_sweep_serial
+    from repro.core.sweep import SweepConfig, run_sweep_batched
+
+    cfg = SearchConfig(width=width, n_n=100,
+                       evolve=EvolveConfig(generations=gens, lam=lam))
+    cons = ([ConstraintSpec(mae=t) for t in (0.3, 0.6, 1.0, 2.0)]
+            + [ConstraintSpec(er=e) for e in (30.0, 60.0)])
+    seeds = tuple(range(n_seeds))
+    n_runs = len(cons) * len(seeds)
+    sweep = SweepConfig(chunk_size=n_runs, keep_history=False)
+
+    run_search(cfg, cons[0], 0)                       # compile serial path
+    run_sweep_batched(cfg, cons, seeds, sweep)        # compile batched path
+
+    t0 = time.perf_counter()
+    run_sweep_serial(cfg, cons, seeds)
+    t_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_sweep_batched(cfg, cons, seeds, sweep)
+    t_batched = time.perf_counter() - t0
+
+    return {
+        "n_runs": n_runs,
+        "serial_runs_per_s": n_runs / t_serial,
+        "batched_runs_per_s": n_runs / t_batched,
+        "batched_speedup": t_serial / t_batched,
+    }
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: eval,gen,pallas,sweep")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    benches = {"eval": bench_eval_throughput, "gen": bench_generation_rate,
+               "pallas": bench_pallas_interpret, "sweep": bench_sweep}
+    if only is not None and (unknown := only - set(benches)):
+        ap.error(f"unknown bench name(s): {sorted(unknown)} "
+                 f"(choose from {sorted(benches)})")
+    for name, fn in benches.items():
+        if only is not None and name not in only:
+            continue
+        out = fn()
+        parts = ", ".join(f"{k}={v:.4g}" for k, v in out.items())
+        print(f"[{name}] {parts}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

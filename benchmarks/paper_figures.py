@@ -20,7 +20,7 @@ import numpy as np
 from repro.core import metrics as M
 from repro.core.evolve import EvolveConfig
 from repro.core.fitness import ConstraintSpec
-from repro.core.pareto import hypervolume_2d, pareto_points
+from repro.core.pareto import hypervolume_2d, metric_correlations, pareto_points
 from repro.core.search import CircuitRecord, SearchConfig, run_sweep
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/paper")
@@ -99,8 +99,7 @@ def fig6_correlations():
         X = np.array([[r.metrics[c] for c in cols] for r in recs])
         if len(recs) < 3:
             return None
-        C = np.corrcoef(X.T)
-        return np.abs(np.nan_to_num(C))
+        return metric_correlations(X)
 
     cw = corr_matrix(wce_recs)
     cm = corr_matrix(mae_recs)

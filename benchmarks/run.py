@@ -51,6 +51,10 @@ def main() -> None:
         r = kernel_micro.bench_pallas_interpret()
         emit("cgp_pallas_interpret_ms", 1e3 * r["pallas_interpret_ms"],
              f"jnp_ref_ms={r['jnp_ref_ms']:.1f}")
+        r = kernel_micro.bench_sweep()
+        emit("sweep_batched_run", 1e6 / max(r["batched_runs_per_s"], 1e-9),
+             f"runs_per_s={r['batched_runs_per_s']:.2f},"
+             f"speedup_vs_serial={r['batched_speedup']:.2f}")
 
     # paper figures ----------------------------------------------------------
     fig_map = {f.__name__.split("_")[0]: f

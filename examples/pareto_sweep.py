@@ -17,7 +17,8 @@ from repro.core import metrics as M
 from repro.core.evolve import EvolveConfig
 from repro.core.fitness import ConstraintSpec
 from repro.core.pareto import pareto_points
-from repro.core.search import SearchConfig, run_sweep
+from repro.core.search import SearchConfig
+from repro.core.sweep import SweepConfig, run_sweep_batched
 
 
 def main():
@@ -25,6 +26,9 @@ def main():
     ap.add_argument("--width", type=int, default=4)
     ap.add_argument("--gens", type=int, default=1500)
     ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--chunk-size", type=int, default=32)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="resume an interrupted sweep from here")
     args = ap.parse_args()
 
     cfg = SearchConfig(width=args.width, n_n=150 if args.width <= 4 else 300,
@@ -37,9 +41,15 @@ def main():
     }
     results = {}
     for name, cons in strategies.items():
-        recs = run_sweep(cfg, cons, seeds=range(args.seeds))
-        results[name] = [r for r in recs if r.feasible]
-        print(f"[{name}] {len(results[name])} feasible circuits")
+        ckpt = (f"{args.checkpoint_dir}/{name}" if args.checkpoint_dir
+                else None)
+        res = run_sweep_batched(
+            cfg, cons, seeds=range(args.seeds),
+            sweep=SweepConfig(chunk_size=args.chunk_size,
+                              checkpoint_dir=ckpt, keep_history=False))
+        results[name] = [r for r in res.records if r.feasible]
+        print(f"[{name}] {len(results[name])} feasible circuits "
+              f"@ {res.runs_per_sec:.2f} runs/s")
 
     for metric, idx in (("MAE%", M.MAE), ("ER%", M.ER)):
         print(f"\n=== power vs {metric} Pareto fronts ===")

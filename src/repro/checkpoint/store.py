@@ -87,15 +87,29 @@ class AsyncCheckpointer:
             self._thread = None
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def committed_steps(ckpt_dir: str) -> list[int]:
+    """All committed step numbers, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
         if name.startswith("step_") and not name.endswith(".tmp"):
             if os.path.exists(os.path.join(ckpt_dir, name, _MARKER)):
                 steps.append(int(name.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_metadata(ckpt_dir: str, step: int) -> dict:
+    """Read only a checkpoint's metadata (cheap identity/fingerprint check
+    before committing to a full ``load_checkpoint`` deserialization)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["metadata"]
 
 
 def load_checkpoint(ckpt_dir: str, step: int, template: Tree,

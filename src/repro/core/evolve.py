@@ -204,6 +204,25 @@ def init_state(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                        golden, fit, key)
 
 
+def scan_generations(step, state0: EvolveState, thresholds: jax.Array,
+                     in_planes: jax.Array, golden_vals: jax.Array,
+                     golden_power: jax.Array, generations: int):
+    """Scan ``step`` over ``generations``, tracing the parent history.
+
+    Shared by the serial, sharded, and batched-sweep paths; ``step`` may carry
+    leading batch axes on state/thresholds (e.g. the vmapped run axis of
+    ``core.sweep``) as long as it accepts the same positional signature as
+    ``make_generation_step``'s result.
+    """
+    def body(state, gen_idx):
+        state = step(state, thresholds, in_planes, golden_vals, gen_idx)
+        out = (state.parent_power / golden_power, state.parent_metrics,
+               state.parent_fit)
+        return state, out
+
+    return jax.lax.scan(body, state0, jnp.arange(generations))
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "cfg"))
 def evolve(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
            thresholds: jax.Array, in_planes: jax.Array,
@@ -213,15 +232,9 @@ def evolve(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
     step = make_generation_step(spec, cfg, golden_power)
     state0 = init_state(spec, cfg, golden, thresholds, in_planes, golden_vals,
                         key)
-
-    def body(state, gen_idx):
-        state = step(state, thresholds, in_planes, golden_vals, gen_idx)
-        out = (state.parent_power / golden_power, state.parent_metrics,
-               state.parent_fit)
-        return state, out
-
-    state, (hp, hm, hf) = jax.lax.scan(body, state0,
-                                       jnp.arange(cfg.generations))
+    state, (hp, hm, hf) = scan_generations(step, state0, thresholds,
+                                           in_planes, golden_vals,
+                                           golden_power, cfg.generations)
     return EvolveResult(state.parent, state.best, state.best_fit, hp, hm, hf)
 
 
@@ -256,14 +269,9 @@ def evolve_sharded(mesh, spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                                     island_axis=data_axis)
         state0 = init_state(spec, cfg, golden, thresholds, in_planes,
                             golden_vals, key[0], axis_name=model_axis)
-
-        def body(state, gen_idx):
-            state = step(state, thresholds, in_planes, golden_vals, gen_idx)
-            return state, (state.parent_power / golden_power,
-                           state.parent_metrics, state.parent_fit)
-
-        state, (hp, hm, hf) = jax.lax.scan(body, state0,
-                                           jnp.arange(cfg.generations))
+        state, (hp, hm, hf) = scan_generations(step, state0, thresholds,
+                                               in_planes, golden_vals,
+                                               golden_power, cfg.generations)
         # re-add leading axes stripped by shard_map (1 island per shard)
         expand = lambda t: jax.tree.map(lambda x: x[None], t)
         return (expand(state.parent), expand(state.best),

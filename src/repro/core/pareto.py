@@ -1,5 +1,13 @@
-"""Pareto-front utilities for the trade-off analyses (paper Figs. 7-14)."""
+"""Pareto-front utilities for the trade-off analyses (paper Figs. 7-14).
+
+Besides the front/hypervolume primitives, this module holds the results layer
+of the batched sweep engine (``core.sweep``): cross-metric correlation
+matrices (Fig. 6) and per-metric power-vs-error fronts over a stacked
+``(n_runs, N_METRICS)`` sweep output (Figs. 7-14).
+"""
 from __future__ import annotations
+
+from typing import Sequence
 
 import numpy as np
 
@@ -37,6 +45,43 @@ def pareto_points(points: np.ndarray) -> np.ndarray:
     m = pareto_front(points)
     sel = np.asarray(points)[m]
     return sel[np.argsort(sel[:, 0])]
+
+
+def metric_correlations(metrics: np.ndarray) -> np.ndarray:
+    """|Pearson| correlation across metric columns (paper Fig. 6).
+
+    Args:
+      metrics: (N, K) stacked metric vectors (e.g. ``SweepResult.metrics``).
+    Returns:
+      (K, K) symmetric matrix with unit diagonal.  Zero-variance columns and
+      N < 3 give zero off-diagonals instead of NaNs (a constant metric is
+      uninformative, not perfectly correlated).
+    """
+    X = np.asarray(metrics, dtype=np.float64)
+    k = X.shape[1] if X.ndim == 2 else 0
+    if X.ndim != 2 or X.shape[0] < 3:
+        return np.eye(k)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        C = np.abs(np.corrcoef(X.T))
+    C = np.nan_to_num(C, nan=0.0)
+    np.fill_diagonal(C, 1.0)
+    return C
+
+
+def sweep_fronts(power: np.ndarray, metrics: np.ndarray,
+                 metric_indices: Sequence[int]) -> dict[int, np.ndarray]:
+    """Power-vs-metric Pareto fronts of a sweep (paper Figs. 7-14 axes).
+
+    Args:
+      power:   (N,) relative power per run.
+      metrics: (N, K) final metric vectors per run.
+    Returns:
+      {metric index: (M, 2) sorted front of (power_rel, metric) points}.
+    """
+    power = np.asarray(power, dtype=np.float64)
+    metrics = np.asarray(metrics, dtype=np.float64)
+    return {int(i): pareto_points(np.stack([power, metrics[:, i]], axis=1))
+            for i in metric_indices}
 
 
 def hypervolume_2d(points: np.ndarray, ref: tuple[float, float]) -> float:

@@ -52,8 +52,7 @@ def problem_arrays(cfg: SearchConfig):
     in_planes = simulate.input_planes(spec.n_i)
     gvals = jnp.asarray(G.golden_values(cfg.width, cfg.kind))
     wires = simulate.simulate_planes(gold, spec, in_planes)
-    probs = simulate.signal_probabilities(wires[spec.n_i:],
-                                          spec.n_inputs_total)
+    probs = simulate.signal_probabilities(wires[spec.n_i:])
     gpower = circuit_cost_from_probs(gold, spec, probs).power
     return gold, spec, in_planes, gvals, gpower
 
@@ -62,9 +61,11 @@ def run_search(cfg: SearchConfig, constraint: ConstraintSpec,
                seed: int = 0) -> tuple[CircuitRecord, EvolveResult]:
     """One (1+λ) run under one combined constraint (paper Eq. 8/9)."""
     gold, spec, in_planes, gvals, gpower = problem_arrays(cfg)
+    # NOTE: cfg.evolve.seed is deliberately NOT replaced — the PRNG key below
+    # carries the seed, and EvolveConfig is a jit static arg, so baking the
+    # seed in would re-trace `evolve` for every run of a sweep.
     ecfg = dataclasses.replace(cfg.evolve,
-                               gauss_sigma=constraint.gauss_sigma,
-                               seed=seed)
+                               gauss_sigma=constraint.gauss_sigma)
     thr = jnp.asarray(constraint.thresholds())
     res = evolve(spec, ecfg, gold, thr, in_planes, gvals, gpower,
                  jax.random.PRNGKey(seed))
@@ -81,8 +82,7 @@ def characterize(genome: Genome, spec: CGPSpec, cfg: SearchConfig,
     cvals = simulate.unpack_values(wires[genome.outs])
     met = M.metrics_from_values(gvals, cvals, spec.n_o,
                                 constraint.gauss_sigma)
-    probs = simulate.signal_probabilities(wires[spec.n_i:],
-                                          spec.n_inputs_total)
+    probs = simulate.signal_probabilities(wires[spec.n_i:])
     cost = circuit_cost_from_probs(genome, spec, probs)
     emean, estd = M.error_moments(gvals, cvals)
     from repro.core.fitness import feasible as feas_fn
@@ -101,8 +101,29 @@ def characterize(genome: Genome, spec: CGPSpec, cfg: SearchConfig,
 
 
 def run_sweep(cfg: SearchConfig, constraints: Sequence[ConstraintSpec],
-              seeds: Sequence[int] = (0,)) -> list[CircuitRecord]:
-    """Grid of constraint configs × seeds (paper Sec. IV methodology)."""
+              seeds: Sequence[int] = (0,), *,
+              sweep=None) -> list[CircuitRecord]:
+    """Grid of constraint configs × seeds (paper Sec. IV methodology).
+
+    Executed by the batched engine (``core.sweep``): the whole grid runs as
+    vmapped chunks of one jit'd program instead of a serial Python loop —
+    pass ``sweep=SweepConfig(...)`` to control chunking / checkpointing.
+    Record order is unchanged (constraints outer, seeds inner).  Histories
+    are unreachable through this records-only API, so the default config
+    skips them; use ``run_sweep_batched`` directly to keep them.
+    """
+    from repro.core.sweep import SweepConfig, run_sweep_batched
+    sweep = sweep or SweepConfig(keep_history=False)
+    return run_sweep_batched(cfg, constraints, seeds, sweep).records
+
+
+def run_sweep_serial(cfg: SearchConfig, constraints: Sequence[ConstraintSpec],
+                     seeds: Sequence[int] = (0,)) -> list[CircuitRecord]:
+    """Reference serial loop (one ``evolve`` dispatch per run).
+
+    Kept as the equivalence oracle for the batched engine (tests) and the
+    baseline of the ``sweep`` microbenchmark.
+    """
     records = []
     for con in constraints:
         for seed in seeds:

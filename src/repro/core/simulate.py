@@ -116,14 +116,20 @@ def simulate_values(genome: Genome, spec: CGPSpec,
     return unpack_values(output_planes(genome, spec, in_planes))
 
 
-def signal_probabilities(wires: jax.Array, n_bits: int) -> jax.Array:
+def signal_probabilities(wires: jax.Array, n_bits: int | None = None) -> jax.Array:
     """Exact P(wire = 1) under uniform inputs, from popcounts of bit-planes.
 
     Args:
       wires: (n_wires, W) packed planes.
-      n_bits: number of valid bits (= cube-slice size, normally W*32).
+      n_bits: number of valid bits in the planes.  Defaults to W*32, which is
+        correct even for sub-word cubes tiled to 32 lanes (``input_planes``):
+        replication multiplies popcount and bit count alike.  Passing the
+        un-tiled cube size for a tiled plane would overestimate p (beyond 1),
+        driving the switching activity 2p(1-p) negative.
     """
     pop = jax.lax.population_count(wires.view(jnp.uint32)).astype(jnp.float32)
+    if n_bits is None:
+        n_bits = wires.shape[-1] * 32
     return pop.sum(axis=-1) / float(n_bits)
 
 

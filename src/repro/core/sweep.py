@@ -1,0 +1,366 @@
+"""Batched constraint-grid sweep engine (paper Sec. IV at scale).
+
+The paper's experiment is a grid of ~27k (1+λ) runs over combined
+error-constraint configurations × seeds.  ``search.run_sweep`` used to walk
+that grid with a serial Python loop around ``evolve`` — one XLA program
+dispatch per run, golden arrays rebuilt and the evolve program re-traced per
+seed.  This module evaluates the whole grid as ONE jit'd program per chunk:
+
+  * the threshold grid is stacked into a ``(chunk, N_METRICS)`` matrix and the
+    per-run PRNG keys into ``(chunk, 2)``; ``make_generation_step`` /
+    ``init_state`` from ``core.evolve`` are vmapped over that run axis,
+  * the golden circuit, input cube and golden power come from ONE
+    ``problem_arrays`` call, are closed over, and are never re-traced — under
+    vmap they stay unbatched so XLA shares them across every run,
+  * generations are scanned on the OUTSIDE with the run axis inside the scan
+    body (``scan_generations`` over a vmapped step), so candidate evaluation
+    fuses across runs — on CPU this amortizes the per-op scheduling overhead
+    that dominates small-width runs; on TPU it feeds the VPU full lanes.
+
+Chunked execution bounds device memory: the grid is split into
+``chunk_size``-run batches (peak live simulation state is roughly
+``chunk_size × λ × n_wires × n_words × 4`` bytes) and chunks are padded to a
+fixed width so every chunk with the same Gauss σ reuses one compiled program.
+Runs with different ``gauss_sigma`` cannot share a trace (σ fixes the static
+histogram bin edges), so chunk boundaries additionally break on σ changes.
+
+Progress is resumable: after every ``checkpoint_every`` chunks the full sweep
+state (evolved parent/best genomes, fitness, final metrics and optional
+per-generation histories) is committed through ``repro.checkpoint.store``;
+a restarted sweep with the same grid fingerprint continues mid-grid from the
+last committed chunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.core import metrics as M
+from repro.core import simulate
+from repro.core.evolve import (EvolveConfig, init_state, make_generation_step,
+                               scan_generations)
+from repro.core.fitness import ConstraintSpec, feasible
+from repro.core.genome import CGPSpec, Genome
+from repro.core.power import circuit_cost_from_probs
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """Execution knobs of the batched sweep (grid semantics live in
+    ``SearchConfig``/``ConstraintSpec``).
+
+    ``checkpoint_dir`` is best given one directory per grid: resume matches
+    checkpoints by grid fingerprint so foreign checkpoints are never loaded,
+    but step numbers are run counts, and two grids sharing a directory can
+    overwrite each other's equal-numbered steps (older ones are also pruned,
+    keep=3, after each commit).
+    """
+    chunk_size: int = 32          # runs per jit'd batch (device-memory bound)
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1     # chunks between checkpoint commits
+    keep_history: bool = True     # per-generation parent histories
+    max_chunks: int | None = None  # stop after N chunks (tests/ops drains)
+
+    def __post_init__(self):
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {self.checkpoint_every}")
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Stacked output of a (possibly partial) grid sweep.
+
+    Run-major arrays are ordered like the grid: ``constraints`` outer,
+    ``seeds`` inner.  Execution internally groups runs by ``gauss_sigma``, so
+    on an interrupted sweep (``max_chunks``) the completed rows need not be a
+    prefix — ``done_mask`` marks them; ``records`` holds exactly the
+    completed runs, in grid order.
+    """
+    records: list                      # list[CircuitRecord], len == completed
+    thresholds: np.ndarray             # (n_runs, N_METRICS)
+    metrics: np.ndarray                # (n_runs, N_METRICS) final measurement
+    power_rel: np.ndarray              # (n_runs,)
+    feasible: np.ndarray               # (n_runs,) bool
+    best_fit: np.ndarray               # (n_runs,)
+    hist_power_rel: np.ndarray | None  # (n_runs, gens)
+    hist_fit: np.ndarray | None        # (n_runs, gens)
+    hist_metrics: np.ndarray | None    # (n_runs, gens, N_METRICS)
+    done_mask: np.ndarray              # (n_runs,) bool — rows populated
+    completed: int
+    n_runs: int
+    runs_per_sec: float                # throughput of this call (0 if resumed
+                                       # with nothing left to do)
+
+    def correlations(self, feasible_only: bool = True) -> np.ndarray:
+        """|Pearson| cross-metric correlation over completed runs."""
+        from repro.core.pareto import metric_correlations
+        mask = self.done_mask & (self.feasible if feasible_only else True)
+        return metric_correlations(self.metrics[mask])
+
+    def fronts(self, metric_indices: Sequence[int] = (M.MAE, M.ER),
+               feasible_only: bool = True) -> dict[int, np.ndarray]:
+        """Power-vs-metric Pareto fronts (paper Figs. 7-14 axes)."""
+        from repro.core.pareto import sweep_fronts
+        mask = self.done_mask & (self.feasible if feasible_only else True)
+        return sweep_fronts(self.power_rel[mask],
+                            self.metrics[mask], metric_indices)
+
+
+# --------------------------------------------------------------------------
+# Batched core (one chunk = one XLA program)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("spec", "cfg"))
+def evolve_chunk(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
+                 thr_mat: jax.Array, in_planes: jax.Array,
+                 golden_vals: jax.Array, golden_power: jax.Array,
+                 keys: jax.Array):
+    """Evolve ``thr_mat.shape[0]`` runs in one program.
+
+    The serial ``evolve`` semantics are preserved per run (same step builder,
+    same per-run PRNG stream): generation scan outside, vmapped run axis
+    inside the scan body.  Histories are returned run-major.
+    """
+    step = make_generation_step(spec, cfg, golden_power)
+    state0 = jax.vmap(
+        lambda t, k: init_state(spec, cfg, golden, t, in_planes,
+                                golden_vals, k))(thr_mat, keys)
+
+    def batched_step(state, thr, planes, gvals, gen_idx):
+        return jax.vmap(lambda s, t: step(s, t, planes, gvals,
+                                          gen_idx))(state, thr)
+
+    state, (hp, hm, hf) = scan_generations(batched_step, state0, thr_mat,
+                                           in_planes, golden_vals,
+                                           golden_power, cfg.generations)
+    return state, hp.T, jnp.swapaxes(hm, 0, 1), hf.T
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "gauss_sigma"))
+def characterize_chunk(spec: CGPSpec, gauss_sigma: float, nodes: jax.Array,
+                       outs: jax.Array, thr_mat: jax.Array,
+                       in_planes: jax.Array, golden_vals: jax.Array,
+                       golden_power: jax.Array):
+    """Vmapped final measurement (metrics + power/delay + error moments)."""
+    def one(n, o, thr):
+        g = Genome(n, o)
+        wires = simulate.simulate_planes(g, spec, in_planes)
+        cvals = simulate.unpack_values(wires[g.outs])
+        met = M.metrics_from_values(golden_vals, cvals, spec.n_o, gauss_sigma)
+        probs = simulate.signal_probabilities(wires[spec.n_i:])
+        cost = circuit_cost_from_probs(g, spec, probs)
+        emean, estd = M.error_moments(golden_vals, cvals)
+        return met, cost.power / golden_power, feasible(met, thr), emean, estd
+
+    return jax.vmap(one)(nodes, outs, thr_mat)
+
+
+# --------------------------------------------------------------------------
+# Grid planning / checkpoint layout
+# --------------------------------------------------------------------------
+
+def sweep_grid(constraints: Sequence[ConstraintSpec],
+               seeds: Sequence[int]) -> list[tuple[ConstraintSpec, int]]:
+    """Run order of the grid: constraints outer, seeds inner (the historical
+    ``run_sweep`` order — records stay comparable across engines)."""
+    return [(con, int(seed)) for con in constraints for seed in seeds]
+
+
+def plan_chunks(sigmas: np.ndarray, chunk_size: int) -> list[tuple[int, int]]:
+    """[start, end) chunk spans: ≤ chunk_size runs, uniform gauss_sigma."""
+    spans, start = [], 0
+    n = len(sigmas)
+    while start < n:
+        end = min(start + chunk_size, n)
+        brk = np.flatnonzero(sigmas[start:end] != sigmas[start])
+        if brk.size:
+            end = start + int(brk[0])
+        spans.append((start, end))
+        start = end
+    return spans
+
+
+def grid_fingerprint(cfg, grid, keep_history: bool) -> str:
+    """Identity of (problem, grid) — guards checkpoint resume."""
+    ecfg = cfg.evolve
+    ident = {
+        "width": cfg.width, "kind": cfg.kind, "n_n": cfg.n_n,
+        "generations": ecfg.generations, "lam": ecfg.lam,
+        "mutation_rate": ecfg.mutation_rate, "backend": ecfg.backend,
+        "migrate_every": ecfg.migrate_every,
+        "keep_history": keep_history,
+        "grid": [(con.describe(), con.gauss_sigma, seed)
+                 for con, seed in grid],
+        "thresholds": hashlib.sha256(
+            np.stack([con.thresholds() for con, _ in grid]).tobytes()
+        ).hexdigest(),
+    }
+    return hashlib.sha256(json.dumps(ident, sort_keys=True,
+                                     default=float).encode()).hexdigest()
+
+
+def _alloc_buffers(spec: CGPSpec, n_runs: int, gens: int,
+                   keep_history: bool) -> dict[str, np.ndarray]:
+    bufs = {
+        "parent_nodes": np.zeros((n_runs, spec.n_n, 3), np.int32),
+        "parent_outs": np.zeros((n_runs, spec.n_o), np.int32),
+        "best_nodes": np.zeros((n_runs, spec.n_n, 3), np.int32),
+        "best_outs": np.zeros((n_runs, spec.n_o), np.int32),
+        "best_fit": np.zeros((n_runs,), np.float32),
+        "metrics": np.zeros((n_runs, M.N_METRICS), np.float32),
+        "power_rel": np.zeros((n_runs,), np.float32),
+        "feasible": np.zeros((n_runs,), np.uint8),
+        "error_mean": np.zeros((n_runs,), np.float32),
+        "error_std": np.zeros((n_runs,), np.float32),
+    }
+    if keep_history:
+        bufs["hist_power_rel"] = np.zeros((n_runs, gens), np.float32)
+        bufs["hist_fit"] = np.zeros((n_runs, gens), np.float32)
+        bufs["hist_metrics"] = np.zeros((n_runs, gens, M.N_METRICS),
+                                        np.float32)
+    return bufs
+
+
+def _try_resume(ckpt_dir: str, bufs: dict, fingerprint: str) -> int:
+    """Load the newest committed state OF THIS GRID in place; returns runs
+    done.  Steps are scanned newest-first by fingerprint so a stale
+    checkpoint of a different grid sharing the directory cannot shadow this
+    grid's progress."""
+    for step in reversed(store.committed_steps(ckpt_dir)):
+        if store.load_metadata(ckpt_dir, step).get("fingerprint") \
+                != fingerprint:
+            continue
+        tree, meta = store.load_checkpoint(ckpt_dir, step, bufs)
+        for k, v in tree.items():
+            bufs[k][...] = np.asarray(v)
+        return int(meta["done"])
+    return 0
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
+                      seeds: Sequence[int] = (0,),
+                      sweep: SweepConfig | None = None) -> SweepResult:
+    """Execute the constraint×seed grid with the batched engine.
+
+    ``cfg`` is a ``search.SearchConfig``; per-run results match the serial
+    ``run_search`` path (same PRNG streams, same evaluation semantics).
+    """
+    from repro.core.search import CircuitRecord, problem_arrays
+
+    sweep = sweep or SweepConfig()
+    grid = sweep_grid(constraints, seeds)
+    n_runs = len(grid)
+    gens = cfg.evolve.generations
+    gold, spec, in_planes, gvals, gpower = problem_arrays(cfg)
+
+    thr = np.stack([con.thresholds() for con, _ in grid])
+    keys = np.stack([np.asarray(jax.random.PRNGKey(s)) for _, s in grid])
+    sigmas = np.array([con.gauss_sigma for con, _ in grid])
+
+    # Execution order groups runs by gauss_sigma (stable, so grid order is
+    # kept within a group): sigma-interleaved grids would otherwise shatter
+    # into tiny chunks that padding blows back up to chunk_size.  Results are
+    # scattered back to grid order; ``done`` counts a prefix of THIS order
+    # (deterministic from the fingerprinted grid, so resume stays valid).
+    perm = np.argsort(sigmas, kind="stable")
+
+    bufs = _alloc_buffers(spec, n_runs, gens, sweep.keep_history)
+    fingerprint = grid_fingerprint(cfg, grid, sweep.keep_history)
+    done = (_try_resume(sweep.checkpoint_dir, bufs, fingerprint)
+            if sweep.checkpoint_dir else 0)
+
+    chunks = plan_chunks(sigmas[perm], sweep.chunk_size)
+    t0 = time.perf_counter()
+    ran = chunks_run = 0
+    for start, end in chunks:
+        if end <= done:
+            continue  # committed by a previous (interrupted) sweep
+        if sweep.max_chunks is not None and chunks_run >= sweep.max_chunks:
+            break
+        n = end - start
+        pad = sweep.chunk_size - n
+        sel = perm[np.r_[start:end, np.full(pad, end - 1)]]  # pad: last run
+        orig = sel[:n]  # grid-order rows this chunk fills
+        sigma = float(sigmas[orig[0]])
+        ecfg = dataclasses.replace(cfg.evolve, gauss_sigma=sigma, seed=0)
+
+        state, hp, hm, hf = evolve_chunk(
+            spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
+            gpower, jnp.asarray(keys[sel]))
+        met, prel, feas, emean, estd = characterize_chunk(
+            spec, sigma, state.parent.nodes, state.parent.outs,
+            jnp.asarray(thr[sel]), in_planes, gvals, gpower)
+
+        bufs["parent_nodes"][orig] = np.asarray(state.parent.nodes)[:n]
+        bufs["parent_outs"][orig] = np.asarray(state.parent.outs)[:n]
+        bufs["best_nodes"][orig] = np.asarray(state.best.nodes)[:n]
+        bufs["best_outs"][orig] = np.asarray(state.best.outs)[:n]
+        bufs["best_fit"][orig] = np.asarray(state.best_fit)[:n]
+        bufs["metrics"][orig] = np.asarray(met)[:n]
+        bufs["power_rel"][orig] = np.asarray(prel)[:n]
+        bufs["feasible"][orig] = np.asarray(feas)[:n].astype(np.uint8)
+        bufs["error_mean"][orig] = np.asarray(emean)[:n]
+        bufs["error_std"][orig] = np.asarray(estd)[:n]
+        if sweep.keep_history:
+            bufs["hist_power_rel"][orig] = np.asarray(hp)[:n]
+            bufs["hist_fit"][orig] = np.asarray(hf)[:n]
+            bufs["hist_metrics"][orig] = np.asarray(hm)[:n]
+
+        done = max(done, end)
+        ran += n
+        chunks_run += 1
+        if sweep.checkpoint_dir and (chunks_run % sweep.checkpoint_every == 0
+                                     or done == n_runs):
+            store.save_checkpoint(sweep.checkpoint_dir, done, bufs,
+                                  {"done": done, "fingerprint": fingerprint})
+            store.cleanup(sweep.checkpoint_dir, keep=3)
+    dt = time.perf_counter() - t0
+
+    done_mask = np.zeros(n_runs, bool)
+    done_mask[perm[:done]] = True
+    records = []
+    for i in np.flatnonzero(done_mask):
+        con, seed = grid[i]
+        records.append(CircuitRecord(
+            genome_nodes=bufs["parent_nodes"][i],
+            genome_outs=bufs["parent_outs"][i],
+            metrics=bufs["metrics"][i],
+            power_rel=float(bufs["power_rel"][i]),
+            constraint=con.describe(),
+            seed=seed,
+            feasible=bool(bufs["feasible"][i]),
+            error_mean=float(bufs["error_mean"][i]),
+            error_std=float(bufs["error_std"][i]),
+        ))
+
+    return SweepResult(
+        records=records,
+        thresholds=thr,
+        metrics=bufs["metrics"],
+        power_rel=bufs["power_rel"],
+        feasible=bufs["feasible"].astype(bool),
+        best_fit=bufs["best_fit"],
+        hist_power_rel=bufs.get("hist_power_rel"),
+        hist_fit=bufs.get("hist_fit"),
+        hist_metrics=bufs.get("hist_metrics"),
+        done_mask=done_mask,
+        completed=done,
+        n_runs=n_runs,
+        runs_per_sec=(ran / dt) if ran else 0.0,
+    )

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.core.fitness import ConstraintSpec
 from repro.core.library import save_library
-from repro.core.search import SearchConfig, run_sweep
+from repro.core.search import SearchConfig, run_sweep_serial
+from repro.core.sweep import SweepConfig, run_sweep_batched
 from repro.core.evolve import EvolveConfig
 
 
@@ -47,6 +48,15 @@ def main():
     ap.add_argument("--seeds", type=int, default=1)
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--out", default=None)
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="runs per jit'd batch of the sweep engine")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="resumable sweep state; rerun with the same grid "
+                         "to continue mid-grid")
+    ap.add_argument("--no-history", action="store_true",
+                    help="drop per-generation histories (smaller checkpoints)")
+    ap.add_argument("--serial", action="store_true",
+                    help="reference serial loop instead of the batched engine")
     args = ap.parse_args()
 
     cfg = SearchConfig(
@@ -54,7 +64,17 @@ def main():
         evolve=EvolveConfig(generations=args.generations, lam=args.lam,
                             backend=args.backend))
     constraints = [parse_constraint(c) for c in args.constraint]
-    records = run_sweep(cfg, constraints, seeds=range(args.seeds))
+    if args.serial:
+        records = run_sweep_serial(cfg, constraints, seeds=range(args.seeds))
+    else:
+        sweep = SweepConfig(chunk_size=args.chunk_size,
+                            checkpoint_dir=args.checkpoint_dir,
+                            keep_history=not args.no_history)
+        result = run_sweep_batched(cfg, constraints, seeds=range(args.seeds),
+                                   sweep=sweep)
+        records = result.records
+        print(f"[evolve] {result.completed}/{result.n_runs} runs "
+              f"@ {result.runs_per_sec:.2f} runs/s", flush=True)
     for r in records:
         met = {n: round(float(v), 4) for n, v in
                zip(("mae", "wce", "er", "mre", "avg", "acc0", "gauss"),

@@ -1,0 +1,64 @@
+"""Deterministic stand-in for ``hypothesis`` on bare environments.
+
+The tier-1 suite property-tests several modules with hypothesis, but the
+container image does not ship it.  This shim implements the tiny subset the
+suite uses (``given``/``settings`` and the ``integers``/``floats``/``lists``
+strategies) by drawing a fixed number of examples from a seeded NumPy
+generator, so the tests stay property-style *and* reproducible.  When real
+hypothesis is installed the test modules import it instead (see their
+try/except imports) and this file is inert.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class st:
+    """Subset of ``hypothesis.strategies`` used by this repo's tests."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        # NOTE: deliberately no functools.wraps — the wrapper must expose a
+        # zero-arg signature or pytest mistakes drawn params for fixtures.
+        def wrapper():
+            n = getattr(fn, "_max_examples", 20)
+            rng = np.random.default_rng(0xC0FFEE)
+            for _ in range(n):
+                fn(*[s.draw(rng) for s in strategies])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

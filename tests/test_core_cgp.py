@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare image: deterministic property-test fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import gates, golden as G, metrics as M, simulate as S
 from repro.core.genome import (CGPSpec, Genome, active_mask, critical_path_ps,

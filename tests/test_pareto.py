@@ -1,0 +1,98 @@
+"""Property tests for the Pareto / sweep-results layer (core.pareto)."""
+import numpy as np
+
+from repro.core.pareto import (hypervolume_2d, metric_correlations,
+                               pareto_front, pareto_points, sweep_fronts)
+
+
+def _dominates(a, b):
+    return (a <= b).all() and (a < b).any()
+
+
+def test_front_properties_random_clouds():
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        n = int(rng.integers(1, 40))
+        k = int(rng.integers(2, 5))
+        pts = rng.uniform(0, 10, size=(n, k))
+        mask = pareto_front(pts)
+        front = pts[mask]
+        assert mask.any()
+        # no front point dominates another front point
+        for i in range(len(front)):
+            for j in range(len(front)):
+                if i != j:
+                    assert not _dominates(front[i], front[j]), trial
+        # every excluded point is dominated by some front point
+        for i in np.flatnonzero(~mask):
+            assert any(_dominates(f, pts[i]) for f in front), trial
+
+
+def test_front_never_selects_nonfinite_rows():
+    rng = np.random.default_rng(1)
+    for trial in range(10):
+        pts = rng.uniform(0, 10, size=(12, 2))
+        bad = rng.integers(0, 12, size=3)
+        pts[bad[0], 0] = np.nan
+        pts[bad[1], 1] = np.inf
+        pts[bad[2], 0] = -np.inf  # would dominate everything if admitted
+        mask = pareto_front(pts)
+        assert not mask[bad].any()
+        assert np.isfinite(pts[mask]).all()
+
+
+def test_front_duplicates_and_single_point():
+    pts = np.array([[1.0, 2.0], [1.0, 2.0], [3.0, 3.0]])
+    mask = pareto_front(pts)
+    # duplicates do not dominate each other; one (or both) stays, [3,3] goes
+    assert mask[:2].any() and not mask[2]
+    assert pareto_front(np.array([[5.0, 5.0]])).all()
+
+
+def test_hypervolume_staircase_hand_computed():
+    # front (1,3),(2,2),(3,1) vs ref (4,4):
+    #   (4-1)*(4-3) + (4-2)*(3-2) + (4-3)*(2-1) = 3 + 2 + 1 = 6
+    pts = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+    assert abs(hypervolume_2d(pts, (4.0, 4.0)) - 6.0) < 1e-12
+    # dominated and out-of-reference points change nothing
+    noisy = np.vstack([pts, [[3.5, 3.5], [10.0, 0.5], [0.5, 10.0]]])
+    assert abs(hypervolume_2d(noisy, (4.0, 4.0)) - 6.0) < 1e-12
+    assert hypervolume_2d(np.zeros((0, 2)), (1.0, 1.0)) == 0.0
+
+
+def test_hypervolume_monotone_under_improvement():
+    rng = np.random.default_rng(2)
+    pts = rng.uniform(1, 5, size=(15, 2))
+    base = hypervolume_2d(pts, (6.0, 6.0))
+    better = np.vstack([pts, [[0.5, 0.5]]])  # dominates everything
+    assert hypervolume_2d(better, (6.0, 6.0)) >= base
+
+
+def test_metric_correlations_basic_properties():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=100)
+    X = np.stack([x, 2.0 * x + 1.0, rng.normal(size=100),
+                  np.full(100, 7.0)], axis=1)
+    C = metric_correlations(X)
+    assert C.shape == (4, 4)
+    np.testing.assert_allclose(C, C.T)
+    np.testing.assert_allclose(np.diag(C), 1.0)
+    assert ((0.0 <= C) & (C <= 1.0 + 1e-12)).all()
+    assert C[0, 1] > 0.999            # affine copies correlate perfectly
+    assert (C[3, :3] == 0.0).all()    # constant column: 0, not NaN
+    # degenerate inputs fall back to identity
+    np.testing.assert_allclose(metric_correlations(X[:2]), np.eye(4))
+
+
+def test_sweep_fronts_shapes_and_membership():
+    rng = np.random.default_rng(4)
+    power = rng.uniform(0.2, 1.0, size=30)
+    metrics = rng.uniform(0, 5.0, size=(30, 7))
+    fronts = sweep_fronts(power, metrics, (0, 2))
+    assert set(fronts) == {0, 2}
+    for idx, front in fronts.items():
+        assert front.shape[1] == 2
+        assert (np.diff(front[:, 0]) >= 0).all()       # sorted by power
+        cloud = np.stack([power, metrics[:, idx]], axis=1)
+        pf = pareto_points(cloud)
+        np.testing.assert_allclose(front, pf)

@@ -6,7 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare image: deterministic property-test fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import store
 from repro.data.pipeline import DataConfig, PrefetchLoader, pack_documents, synth_batch
