@@ -104,13 +104,19 @@ def bench_generation_rate(width: int = 8):
 
 
 def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
-                n_seeds: int = 2):
-    """Constraint-grid throughput (runs/s): batched engine vs serial loop.
+                n_seeds: int = 2, backends: tuple = ("jnp", "pallas")):
+    """Constraint-grid throughput (runs/s): batched engine vs serial loop,
+    with a ``backend`` axis over the candidate-evaluation path.
 
-    The grid is 6 constraint configs × ``n_seeds`` seeds; both paths are
-    compiled before timing, so the ratio isolates execution throughput (the
+    The grid is 6 constraint configs × ``n_seeds`` seeds; all paths are
+    compiled before timing, so the ratios isolate execution throughput (the
     batched engine additionally saves one trace per seed on the cold path).
+    The "pallas" leg drives the fused (runs × λ) kernel — on CPU it runs in
+    interpret mode, so its runs/s is a correctness-path reference; the
+    jnp-vs-pallas gap worth tracking is on a TPU backend.
     """
+    import dataclasses
+
     from repro.core.evolve import EvolveConfig
     from repro.core.fitness import ConstraintSpec
     from repro.core.search import SearchConfig, run_search, run_sweep_serial
@@ -125,32 +131,40 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
     sweep = SweepConfig(chunk_size=n_runs, keep_history=False)
 
     run_search(cfg, cons[0], 0)                       # compile serial path
-    run_sweep_batched(cfg, cons, seeds, sweep)        # compile batched path
-
     t0 = time.perf_counter()
     run_sweep_serial(cfg, cons, seeds)
     t_serial = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    run_sweep_batched(cfg, cons, seeds, sweep)
-    t_batched = time.perf_counter() - t0
+    out = {"n_runs": n_runs, "serial_runs_per_s": n_runs / t_serial}
 
-    return {
-        "n_runs": n_runs,
-        "serial_runs_per_s": n_runs / t_serial,
-        "batched_runs_per_s": n_runs / t_batched,
-        "batched_speedup": t_serial / t_batched,
-    }
+    for backend in backends:
+        cfg_b = dataclasses.replace(
+            cfg, evolve=dataclasses.replace(cfg.evolve, backend=backend))
+        run_sweep_batched(cfg_b, cons, seeds, sweep)  # compile batched path
+        t0 = time.perf_counter()
+        run_sweep_batched(cfg_b, cons, seeds, sweep)
+        t_b = time.perf_counter() - t0
+        out[f"batched_{backend}_runs_per_s"] = n_runs / t_b
+        out[f"batched_{backend}_speedup"] = t_serial / t_b
+    return out
 
 
 def main(argv=None):
     import argparse
+    import functools
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: eval,gen,pallas,sweep")
+    ap.add_argument("--backend", default="jnp,pallas",
+                    help="comma list of sweep-engine backends to time "
+                         "(--only sweep axis; default: jnp,pallas)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    backends = tuple(b for b in args.backend.split(",") if b)
+    if unknown := set(backends) - {"jnp", "pallas"}:
+        ap.error(f"unknown backend(s): {sorted(unknown)}")
     benches = {"eval": bench_eval_throughput, "gen": bench_generation_rate,
-               "pallas": bench_pallas_interpret, "sweep": bench_sweep}
+               "pallas": bench_pallas_interpret,
+               "sweep": functools.partial(bench_sweep, backends=backends)}
     if only is not None and (unknown := only - set(benches)):
         ap.error(f"unknown bench name(s): {sorted(unknown)} "
                  f"(choose from {sorted(benches)})")

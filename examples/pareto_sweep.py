@@ -29,10 +29,14 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=32)
     ap.add_argument("--checkpoint-dir", default=None,
                     help="resume an interrupted sweep from here")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
+                    help="candidate evaluation: pure-jnp or the fused "
+                         "(runs x lambda) Pallas kernel (interpret on CPU)")
     args = ap.parse_args()
 
     cfg = SearchConfig(width=args.width, n_n=150 if args.width <= 4 else 300,
-                       evolve=EvolveConfig(generations=args.gens, lam=8))
+                       evolve=EvolveConfig(generations=args.gens, lam=8,
+                                           backend=args.backend))
     strategies = {
         "mae-only": [ConstraintSpec(mae=t) for t in (0.2, 0.5, 1.0, 2.0)],
         "er-only": [ConstraintSpec(er=t) for t in (20, 40, 60, 80)],

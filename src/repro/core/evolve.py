@@ -35,6 +35,10 @@ from repro.core.fitness import fitness as fitness_fn
 from repro.core.genome import CGPSpec, Genome
 from repro.core.mutate import mutate_population
 from repro.core.power import CircuitCost, circuit_cost_from_probs
+# Imported at module scope rather than inside the (jit-traced) eval path:
+# every backend path shares one ops module and its process-wide
+# interpret-mode pin (see ops.default_interpret).
+from repro.kernels import ops as kops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,7 +108,6 @@ def _eval_pallas(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
                  golden_vals: jax.Array, gauss_sigma: float,
                  axis_name: str | None) -> EvalResult:
     """Fused Pallas sim+metrics kernel path (interpret=True on CPU)."""
-    from repro.kernels import ops as kops
     partials, pop = kops.cgp_eval(genome, spec, in_planes, golden_vals,
                                   gauss_sigma)
     if axis_name is not None:
@@ -119,6 +122,44 @@ def _eval_pallas(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
 
 def get_eval_fn(backend: str) -> Callable[..., EvalResult]:
     return {"jnp": _eval_jnp, "pallas": _eval_pallas}[backend]
+
+
+def _eval_pop_jnp(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
+                  golden_vals: jax.Array, gauss_sigma: float,
+                  axis_name: str | None) -> EvalResult:
+    """Population (leading-R) evaluation: vmap of the per-genome jnp path."""
+    return jax.vmap(lambda g: _eval_jnp(g, spec, in_planes, golden_vals,
+                                        gauss_sigma, axis_name))(genomes)
+
+
+def _eval_pop_pallas(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
+                     golden_vals: jax.Array, gauss_sigma: float,
+                     axis_name: str | None) -> EvalResult:
+    """Population evaluation as ONE fused kernel dispatch.
+
+    The stacked genome axis lands on Pallas grid dimension 0 instead of a
+    vmap batching dimension (``kernels.ops.cgp_eval_batched``).  Input-space
+    sharding (``axis_name``) needs per-genome psum'd partials and keeps the
+    per-genome kernel under vmap.
+    """
+    if axis_name is not None:
+        return jax.vmap(lambda g: _eval_pallas(g, spec, in_planes,
+                                               golden_vals, gauss_sigma,
+                                               axis_name))(genomes)
+    partials, pops = kops.cgp_eval_batched(genomes, spec, in_planes,
+                                           golden_vals, gauss_sigma)
+    n_total = partials.count.astype(jnp.float32)            # (R,)
+    probs = pops / n_total[:, None]
+    metric_vec = jax.vmap(
+        lambda p: M.finalize_metrics(p, spec.n_o, gauss_sigma))(partials)
+    cost = jax.vmap(lambda g, pr: circuit_cost_from_probs(
+        g, spec, pr, with_delay=False))(genomes, probs)
+    return EvalResult(metric_vec, cost)
+
+
+def get_population_eval(backend: str) -> Callable[..., EvalResult]:
+    """Evaluation of (R,)-stacked genomes -> EvalResult with leading R."""
+    return {"jnp": _eval_pop_jnp, "pallas": _eval_pop_pallas}[backend]
 
 
 # --------------------------------------------------------------------------
@@ -152,15 +193,14 @@ def make_generation_step(spec: CGPSpec, cfg: EvolveConfig,
 
     Returns step(state, thresholds, in_planes, golden_vals, gen_idx) -> state.
     """
-    eval_fn = get_eval_fn(cfg.backend)
+    eval_pop = get_population_eval(cfg.backend)
 
     def step(state: EvolveState, thresholds, in_planes, golden_vals, gen_idx):
         key, k_mut = jax.random.split(state.key)
         offspring = mutate_population(k_mut, state.parent, spec, cfg.lam,
                                       cfg.mutation_rate)
-        res = jax.vmap(
-            lambda g: eval_fn(g, spec, in_planes, golden_vals,
-                              cfg.gauss_sigma, axis_name))(offspring)
+        res = eval_pop(offspring, spec, in_planes, golden_vals,
+                       cfg.gauss_sigma, axis_name)
         fits = jax.vmap(fitness_fn)(res.cost.power,
                                     res.metric_vec,
                                     jnp.broadcast_to(thresholds,
@@ -202,6 +242,61 @@ def init_state(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
     fit = fitness_fn(res.cost.power, res.metric_vec, thresholds)
     return EvolveState(golden, fit, res.metric_vec, res.cost.power,
                        golden, fit, key)
+
+
+def make_batched_generation_step(spec: CGPSpec, cfg: EvolveConfig,
+                                 golden_power: jax.Array):
+    """Run-batched one-generation function for the batched sweep engine.
+
+    ``state`` leaves and ``thr_mat`` carry a leading run axis C.  Mutation
+    and selection are vmapped per run (preserving each run's PRNG stream
+    exactly as the serial path draws it), but the (C × λ) offspring
+    population is FLATTENED and evaluated in one shot — for
+    ``backend="pallas"`` that is a single fused kernel dispatch with
+    R = C·λ genomes on the grid, instead of a vmap-of-vmap-of-pallas_call.
+    Same positional signature as ``make_generation_step``'s result, so it
+    drops into ``scan_generations`` directly.
+    """
+    eval_pop = get_population_eval(cfg.backend)
+
+    def step(state: EvolveState, thr_mat, in_planes, golden_vals, gen_idx):
+        C = thr_mat.shape[0]
+        keys = jax.vmap(jax.random.split)(state.key)        # (C, 2, 2)
+        key, k_mut = keys[:, 0], keys[:, 1]
+        offspring = jax.vmap(
+            lambda k, p: mutate_population(k, p, spec, cfg.lam,
+                                           cfg.mutation_rate))(k_mut,
+                                                               state.parent)
+        flat = jax.tree.map(
+            lambda x: x.reshape((C * cfg.lam,) + x.shape[2:]), offspring)
+        res = eval_pop(flat, spec, in_planes, golden_vals, cfg.gauss_sigma,
+                       None)
+        res = jax.tree.map(
+            lambda x: x.reshape((C, cfg.lam) + x.shape[1:]), res)
+        fits = jax.vmap(lambda p, m, t: jax.vmap(fitness_fn)(
+            p, m, jnp.broadcast_to(t, (cfg.lam,) + t.shape)))(
+                res.cost.power, res.metric_vec, thr_mat)
+        return jax.vmap(_select)(state._replace(key=key), offspring, fits,
+                                 res.metric_vec, res.cost.power)
+
+    return step
+
+
+def init_state_batched(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
+                       thr_mat: jax.Array, in_planes: jax.Array,
+                       golden_vals: jax.Array, keys: jax.Array) -> EvolveState:
+    """Per-run init for the batched sweep: the golden parent is evaluated
+    ONCE (it is identical for every run) and broadcast over the run axis;
+    only fitness differs per run (per-run thresholds)."""
+    eval_fn = get_eval_fn(cfg.backend)
+    res = eval_fn(golden, spec, in_planes, golden_vals, cfg.gauss_sigma, None)
+    C = thr_mat.shape[0]
+    fit = jax.vmap(
+        lambda t: fitness_fn(res.cost.power, res.metric_vec, t))(thr_mat)
+    rep = lambda x: jnp.broadcast_to(x, (C,) + x.shape)
+    parent = jax.tree.map(rep, golden)
+    return EvolveState(parent, fit, rep(res.metric_vec), rep(res.cost.power),
+                       parent, fit, keys)
 
 
 def scan_generations(step, state0: EvolveState, thresholds: jax.Array,

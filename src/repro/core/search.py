@@ -108,6 +108,9 @@ def run_sweep(cfg: SearchConfig, constraints: Sequence[ConstraintSpec],
     Executed by the batched engine (``core.sweep``): the whole grid runs as
     vmapped chunks of one jit'd program instead of a serial Python loop —
     pass ``sweep=SweepConfig(...)`` to control chunking / checkpointing.
+    With ``cfg.evolve.backend="pallas"`` each chunk generation evaluates its
+    whole (chunk × λ) population in ONE fused kernel dispatch (the genome
+    axis on the Pallas grid); results stay bit-identical to the serial loop.
     Record order is unchanged (constraints outer, seeds inner).  Histories
     are unreachable through this records-only API, so the default config
     skips them; use ``run_sweep_batched`` directly to keep them.

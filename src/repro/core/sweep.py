@@ -7,8 +7,12 @@ dispatch per run, golden arrays rebuilt and the evolve program re-traced per
 seed.  This module evaluates the whole grid as ONE jit'd program per chunk:
 
   * the threshold grid is stacked into a ``(chunk, N_METRICS)`` matrix and the
-    per-run PRNG keys into ``(chunk, 2)``; ``make_generation_step`` /
-    ``init_state`` from ``core.evolve`` are vmapped over that run axis,
+    per-run PRNG keys into ``(chunk, 2)``; ``make_batched_generation_step`` /
+    ``init_state_batched`` from ``core.evolve`` carry that run axis — mutation
+    and selection are vmapped per run, but each generation's whole
+    (chunk × λ) offspring population is evaluated in one shot (for
+    ``backend="pallas"`` a single fused kernel dispatch with the genome axis
+    on the Pallas grid),
   * the golden circuit, input cube and golden power come from ONE
     ``problem_arrays`` call, are closed over, and are never re-traced — under
     vmap they stay unbatched so XLA shares them across every run,
@@ -46,8 +50,8 @@ import numpy as np
 from repro.checkpoint import store
 from repro.core import metrics as M
 from repro.core import simulate
-from repro.core.evolve import (EvolveConfig, init_state, make_generation_step,
-                               scan_generations)
+from repro.core.evolve import (EvolveConfig, init_state_batched,
+                               make_batched_generation_step, scan_generations)
 from repro.core.fitness import ConstraintSpec, feasible
 from repro.core.genome import CGPSpec, Genome
 from repro.core.power import circuit_cost_from_probs
@@ -129,19 +133,16 @@ def evolve_chunk(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                  keys: jax.Array):
     """Evolve ``thr_mat.shape[0]`` runs in one program.
 
-    The serial ``evolve`` semantics are preserved per run (same step builder,
-    same per-run PRNG stream): generation scan outside, vmapped run axis
-    inside the scan body.  Histories are returned run-major.
+    The serial ``evolve`` semantics are preserved per run (same per-run PRNG
+    stream, same selection): generation scan outside, run axis inside the
+    scan body via ``evolve.make_batched_generation_step``, which evaluates
+    the whole (chunk × λ) offspring population in one shot per generation —
+    for ``backend="pallas"`` that is a single fused kernel dispatch with the
+    genome axis on the Pallas grid.  Histories are returned run-major.
     """
-    step = make_generation_step(spec, cfg, golden_power)
-    state0 = jax.vmap(
-        lambda t, k: init_state(spec, cfg, golden, t, in_planes,
-                                golden_vals, k))(thr_mat, keys)
-
-    def batched_step(state, thr, planes, gvals, gen_idx):
-        return jax.vmap(lambda s, t: step(s, t, planes, gvals,
-                                          gen_idx))(state, thr)
-
+    batched_step = make_batched_generation_step(spec, cfg, golden_power)
+    state0 = init_state_batched(spec, cfg, golden, thr_mat, in_planes,
+                                golden_vals, keys)
     state, (hp, hm, hf) = scan_generations(batched_step, state0, thr_mat,
                                            in_planes, golden_vals,
                                            golden_power, cfg.generations)

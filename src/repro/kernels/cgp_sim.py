@@ -8,15 +8,37 @@ same pass unpacks integer outputs and accumulates every error-metric partial
 so a candidate costs exactly one HBM read of its input-plane block and O(10)
 scalars of HBM write-back.
 
-Grid: one program per input-cube block; outputs use the standard Pallas
-revisiting-accumulator pattern (all blocks map to output block 0, initialized
-at program 0).  Population parallelism comes from ``jax.vmap`` over genomes
-(ops.py), which becomes an extra grid dimension.
+Grid: ``(R, W // bw)`` — the GENOME axis is grid dimension 0 (one sweep-chunk
+of ``runs × λ`` candidates per dispatch, ``core.sweep``/``core.evolve`` flatten
+the population into it) and the input-cube block axis is dimension 1.  The
+whole population is ONE dispatch with the run axis on the grid instead of a
+``jax.vmap`` batching dimension.  Outputs use the standard Pallas
+revisiting-accumulator pattern per genome: every cube block of genome ``r``
+maps to output row ``r``, initialized at block 0.  The cube axis must be
+INNERMOST for that pattern (an accumulator row's visits have to be
+consecutive grid steps), which means each genome still streams the input
+cube from HBM once — same per-candidate traffic as the paper's formulation;
+what the fused grid removes is the per-genome dispatch/trace overhead, and
+the input-plane/golden index maps ignore ``r`` so the pipeliner skips the
+re-fetch whenever a block's index is unchanged between consecutive steps
+(always true for the common sub-word-cube test widths, where W == bw).
+Cross-genome cube-block reuse at paper scale would need the transposed grid
+plus accumulators in flushed VMEM scratch — ROADMAP, mesh-sharding item.
 
-VMEM budget at the paper scale (8x8 multiplier, block=512 words):
-  wires scratch (416, 512) int32 ≈ 0.85 MB; in-planes block 32 KB;
-  golden block 64 KB — comfortably inside the ~16 MB/core budget, and the
-  block shape keeps the lane dimension at 512 (mod-128 aligned).
+All output refs are ≥2D ``(1, cols)`` blocks of ``(R, cols)`` arrays and the
+golden values are blocked as ``(1, bw*32)`` rows (lane-dim multiple of 128 for
+``bw ≥ 4``) so the kernel lowers through Mosaic — 1D refs and 1D iota are not
+TPU-lowerable.  The genome axis is padded to a multiple of ``r_tile``
+(default 8, one float32 sublane) so the ``(R, ·)`` accumulators stay
+sublane-aligned; padded rows recompute the last genome and are sliced off.
+
+VMEM budget at the paper scale (8x8 multiplier, 400 nodes, block=512 words):
+  wires scratch (416, 512) int32 ≈ 0.85 MB; in-planes block 32 KB; golden
+  block 64 KB; per-genome blocks: nodes 4.8 KB + accumulator rows < 2 KB —
+  the genome grid axis adds only the nodes/outs/accumulator rows (the wire
+  scratch is reused across ``r``), so the fused (runs × λ) grid stays at
+  ~1 MB total, comfortably inside the ~16 MB/core budget, and the block
+  shape keeps the lane dimension at 512 (mod-128 aligned).
 """
 from __future__ import annotations
 
@@ -24,7 +46,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -36,10 +57,15 @@ ABS_HI, ABS_LO, ERR_CNT, REL_SUM, POS_HI, POS_LO, NEG_HI, NEG_LO, \
 N_SUMS = 10
 
 
-def _gate_eval(func: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
-    """Branch-free packed gate eval via the packed truth-table scalar."""
+def _gate_eval(func: jax.Array, a: jax.Array, b: jax.Array,
+               tt_packed: int = gates.TT_PACKED) -> jax.Array:
+    """Branch-free packed gate eval via a packed truth-table scalar.
+
+    ``tt_packed`` holds up to eight 4-bit truth tables (bit ``k`` of table
+    ``f`` = output for inputs with ``a + 2b = k``); ``func`` selects one.
+    """
     tt = jax.lax.shift_right_logical(
-        jnp.uint32(gates.TT_PACKED), (4 * func).astype(jnp.uint32))
+        jnp.uint32(tt_packed), (4 * func).astype(jnp.uint32))
     tt = (tt & jnp.uint32(0xF)).astype(jnp.int32)
     na, nb = ~a, ~b
     m0, m1, m2, m3 = na & nb, a & nb, na & b, a & b
@@ -58,7 +84,8 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
                    sums_ref, wce_ref, hist_ref, pops_ref, wires,
                    *, n_i: int, n_n: int, n_o: int,
                    gauss_sigma: float, n_gauss_side: int, n_bins: int):
-    blk = pl.program_id(0)
+    """One (genome r, cube block w) grid step of the fused evaluation."""
+    blk = pl.program_id(1)
 
     @pl.when(blk == 0)
     def _init():
@@ -73,7 +100,10 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
     wires[0:n_i, :] = planes_ref[...]
 
     def node_step(k, _):
-        node = pl.load(nodes_ref, (k, slice(None)))  # (3,) int32
+        # row 0: the genome axis is blocked to (1, ...) per grid step.  The
+        # leading index must be a jnp scalar — interpret-mode discharge of a
+        # mixed static/dynamic pl.load rejects raw Python ints.
+        node = pl.load(nodes_ref, (jnp.int32(0), k, slice(None)))  # (3,) i32
         a = pl.load(wires, (node[0], slice(None)))
         b = pl.load(wires, (node[1], slice(None)))
         out = _gate_eval(node[2], a, b)
@@ -86,13 +116,13 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
     gate_planes = wires[n_i:n_i + n_n, :]
     pops = jax.lax.population_count(
         gate_planes.view(jnp.uint32)).astype(jnp.float32).sum(axis=1)
-    pops_ref[...] += pops
+    pops_ref[...] += pops[None, :]
 
     # --- phase 2: unpack outputs, fuse metric partials ---------------------
     lanes = jax.lax.broadcasted_iota(jnp.int32, (bw, 32), 1)
     vals = jnp.zeros((bw, 32), jnp.int32)
     for o in range(n_o):  # static unroll: n_o is small (<= 2*width)
-        plane = pl.load(wires, (outs_ref[o], slice(None)))  # (bw,)
+        plane = pl.load(wires, (outs_ref[0, o], slice(None)))  # (bw,)
         bits = (plane[:, None] >> lanes) & 1
         vals += bits << o
 
@@ -114,9 +144,9 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
     upd = upd.at[ACC0_BAD].set(
         ((g == 0) & (vals != 0)).astype(jnp.float32).sum())
     upd = upd.at[COUNT].set(float(32) * bw)
-    sums_ref[...] += upd
+    sums_ref[...] += upd[None, :]
 
-    wce_ref[0] = jnp.maximum(wce_ref[0], ad.max())
+    wce_ref[0, 0] = jnp.maximum(wce_ref[0, 0], ad.max())
 
     # σ-wide histogram bins over ±n_side·σ (+2 tails); scatter-free: static
     # per-bin masked reductions (TPU-friendly, n_bins ~ 10)
@@ -124,11 +154,80 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
     idx = jnp.clip(
         jnp.floor((diff.astype(jnp.float32) - e0) / gauss_sigma).astype(jnp.int32) + 1,
         0, n_bins - 1)
-    nzf = nz.astype(jnp.float32)
     hist_upd = jnp.zeros((n_bins,), jnp.float32)
     for b in range(n_bins):  # static unroll
         hist_upd = hist_upd.at[b].set(((idx == b) & nz).astype(jnp.float32).sum())
-    hist_ref[...] += hist_upd
+    hist_ref[...] += hist_upd[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_i", "n_n", "n_o", "gauss_sigma", "n_gauss_side",
+                     "block_words", "r_tile", "interpret"))
+def cgp_sim_metrics_batched(nodes: jax.Array, outs: jax.Array,
+                            in_planes: jax.Array, golden_vals: jax.Array,
+                            *, n_i: int, n_n: int, n_o: int,
+                            gauss_sigma: float = 256.0, n_gauss_side: int = 4,
+                            block_words: int = 512, r_tile: int = 8,
+                            interpret: bool = True):
+    """Fused (runs × λ) pallas_call: ONE dispatch for R stacked genomes.
+
+    Args:
+      nodes: (R, n_n, 3) int32 stacked genomes; outs: (R, n_o) int32.
+      in_planes: (n_i, W) int32 — shared across the genome axis.
+      golden_vals: (W*32,) int32 — shared across the genome axis.
+      r_tile: sublane-alignment pad of the genome axis; R is padded up to a
+        multiple with copies of the last genome, sliced off on return, so
+        ragged R (e.g. a non-multiple sweep-chunk tail) is transparent.
+    Returns per-genome accumulators
+      (sums (R, N_SUMS) f32, wce (R, 1) i32, hist (R, n_bins) f32,
+       pops (R, n_n) f32).
+    """
+    R = nodes.shape[0]
+    r_pad = (-R) % r_tile
+    if r_pad:
+        nodes = jnp.concatenate(
+            [nodes, jnp.broadcast_to(nodes[-1:], (r_pad, n_n, 3))])
+        outs = jnp.concatenate(
+            [outs, jnp.broadcast_to(outs[-1:], (r_pad, n_o))])
+    Rp = R + r_pad
+    W = in_planes.shape[1]
+    bw = min(block_words, W)
+    assert W % bw == 0, (W, bw)
+    n_bins = 2 * n_gauss_side + 2
+    n_wires = n_i + n_n
+    golden_blocks = golden_vals.reshape(W // bw, bw * 32)
+
+    kernel = functools.partial(
+        cgp_sim_kernel, n_i=n_i, n_n=n_n, n_o=n_o, gauss_sigma=gauss_sigma,
+        n_gauss_side=n_gauss_side, n_bins=n_bins)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((Rp, N_SUMS), jnp.float32),
+        jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+        jax.ShapeDtypeStruct((Rp, n_bins), jnp.float32),
+        jax.ShapeDtypeStruct((Rp, n_n), jnp.float32),
+    )
+    grid = (Rp, W // bw)
+    acc_spec = lambda cols: pl.BlockSpec((1, cols), lambda r, w: (r, 0))
+    sums, wce, hist, pops = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_n, 3), lambda r, w: (r, 0, 0)),  # genome nodes
+            pl.BlockSpec((1, n_o), lambda r, w: (r, 0)),        # genome outs
+            pl.BlockSpec((n_i, bw), lambda r, w: (0, w)),       # planes blk
+            pl.BlockSpec((1, bw * 32), lambda r, w: (w, 0)),    # golden blk
+        ],
+        out_specs=(acc_spec(N_SUMS), acc_spec(1), acc_spec(n_bins),
+                   acc_spec(n_n)),
+        out_shape=out_shapes,
+        scratch_shapes=[pltpu.VMEM((n_wires, bw), jnp.int32)],
+        interpret=interpret,
+    )(nodes, outs, in_planes, golden_blocks)
+    if r_pad:
+        sums, wce, hist, pops = sums[:R], wce[:R], hist[:R], pops[:R]
+    return sums, wce, hist, pops
 
 
 @functools.partial(
@@ -139,40 +238,15 @@ def cgp_sim_metrics(nodes: jax.Array, outs: jax.Array, in_planes: jax.Array,
                     golden_vals: jax.Array, *, n_i: int, n_n: int, n_o: int,
                     gauss_sigma: float = 256.0, n_gauss_side: int = 4,
                     block_words: int = 512, interpret: bool = True):
-    """pallas_call wrapper.  Returns (sums(10,), wce(1,), hist, pops(n_n,)).
+    """Per-genome wrapper.  Returns (sums(10,), wce(1,), hist, pops(n_n,)).
 
-    in_planes: (n_i, W) int32; golden_vals: (W*32,) int32.
+    in_planes: (n_i, W) int32; golden_vals: (W*32,) int32.  Delegates to the
+    batched kernel with a singleton genome axis (``r_tile=1``: no pad rows),
+    so there is exactly one kernel body to validate.
     """
-    W = in_planes.shape[1]
-    bw = min(block_words, W)
-    assert W % bw == 0, (W, bw)
-    n_bins = 2 * n_gauss_side + 2
-    n_wires = n_i + n_n
-
-    kernel = functools.partial(
-        cgp_sim_kernel, n_i=n_i, n_n=n_n, n_o=n_o, gauss_sigma=gauss_sigma,
-        n_gauss_side=n_gauss_side, n_bins=n_bins)
-
-    out_shapes = (
-        jax.ShapeDtypeStruct((N_SUMS,), jnp.float32),
-        jax.ShapeDtypeStruct((1,), jnp.int32),
-        jax.ShapeDtypeStruct((n_bins,), jnp.float32),
-        jax.ShapeDtypeStruct((n_n,), jnp.float32),
-    )
-    grid = (W // bw,)
-    acc_spec = lambda shape: pl.BlockSpec(shape, lambda w: (0,) * len(shape))
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((n_n, 3), lambda w: (0, 0)),       # nodes (VMEM)
-            pl.BlockSpec((n_o,), lambda w: (0,)),           # outs
-            pl.BlockSpec((n_i, bw), lambda w: (0, w)),      # input planes blk
-            pl.BlockSpec((bw * 32,), lambda w: (w,)),       # golden values blk
-        ],
-        out_specs=(acc_spec((N_SUMS,)), acc_spec((1,)), acc_spec((n_bins,)),
-                   acc_spec((n_n,))),
-        out_shape=out_shapes,
-        scratch_shapes=[pltpu.VMEM((n_wires, bw), jnp.int32)],
-        interpret=interpret,
-    )(nodes, outs, in_planes, golden_vals)
+    sums, wce, hist, pops = cgp_sim_metrics_batched(
+        nodes[None], outs[None], in_planes, golden_vals,
+        n_i=n_i, n_n=n_n, n_o=n_o, gauss_sigma=gauss_sigma,
+        n_gauss_side=n_gauss_side, block_words=block_words,
+        r_tile=1, interpret=interpret)
+    return sums[0], wce[0], hist[0], pops[0]

@@ -22,6 +22,46 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+_INTERPRET_DEFAULT: bool | None = None
+
+
+def default_interpret() -> bool:
+    """Process-wide interpret-mode default for every kernel wrapper.
+
+    Resolved from ``jax.default_backend()`` ONCE, at the first call, and
+    cached for the life of the process.  ``jax.default_backend()`` itself is
+    insensitive to trace context (it reads the process platform config, not
+    e.g. a ``jax.default_device`` scope), so resolving it during tracing is
+    safe — the trap this cache closes is the report CHANGING between traces
+    (a ``jax.config.update("jax_platform_name", ...)`` after the first
+    evolve trace was built): per-call resolution would bake different modes
+    into different cached traces of the same program.  One pinned resolution
+    makes every trace in the process agree.  (No eager import-time pin: that
+    would force backend initialization as an import side effect.)
+    """
+    global _INTERPRET_DEFAULT
+    if _INTERPRET_DEFAULT is None:
+        _INTERPRET_DEFAULT = not _on_tpu()
+    return _INTERPRET_DEFAULT
+
+
+def _partials_from_sums(sums: jax.Array, wce: jax.Array, hist: jax.Array
+                        ) -> M.MetricPartials:
+    """Decode the kernel's (..., N_SUMS) split-sum rows into MetricPartials."""
+    C = _cgp
+    return M.MetricPartials(
+        abs_sum=256.0 * sums[..., C.ABS_HI] + sums[..., C.ABS_LO],
+        wce_max=wce[..., 0],
+        err_count=sums[..., C.ERR_CNT].astype(jnp.int32),
+        rel_sum=sums[..., C.REL_SUM],
+        sgn_sum=(256.0 * sums[..., C.POS_HI] + sums[..., C.POS_LO])
+                - (256.0 * sums[..., C.NEG_HI] + sums[..., C.NEG_LO]),
+        acc0_bad=sums[..., C.ACC0_BAD].astype(jnp.int32),
+        hist=hist.astype(jnp.int32),
+        count=sums[..., C.COUNT].astype(jnp.int32),
+    )
+
+
 def cgp_eval(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
              golden_vals: jax.Array, gauss_sigma: float = 256.0,
              block_words: int = 512, interpret: bool | None = None
@@ -31,32 +71,49 @@ def cgp_eval(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
     Drop-in for ref.cgp_eval_ref; used by core.evolve backend="pallas".
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     sums, wce, hist, pops = _cgp.cgp_sim_metrics(
         genome.nodes, genome.outs, in_planes, golden_vals,
         n_i=spec.n_i, n_n=spec.n_n, n_o=spec.n_o,
         gauss_sigma=gauss_sigma, block_words=block_words,
         interpret=interpret)
-    C = _cgp
-    partials = M.MetricPartials(
-        abs_sum=256.0 * sums[C.ABS_HI] + sums[C.ABS_LO],
-        wce_max=wce[0],
-        err_count=sums[C.ERR_CNT].astype(jnp.int32),
-        rel_sum=sums[C.REL_SUM],
-        sgn_sum=(256.0 * sums[C.POS_HI] + sums[C.POS_LO])
-                - (256.0 * sums[C.NEG_HI] + sums[C.NEG_LO]),
-        acc0_bad=sums[C.ACC0_BAD].astype(jnp.int32),
-        hist=hist.astype(jnp.int32),
-        count=sums[C.COUNT].astype(jnp.int32),
-    )
-    return partials, pops
+    return _partials_from_sums(sums, wce, hist), pops
+
+
+def cgp_eval_batched(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
+                     golden_vals: jax.Array, gauss_sigma: float = 256.0,
+                     block_words: int = 512, interpret: bool | None = None,
+                     r_tile: int | None = None
+                     ) -> tuple[M.MetricPartials, jax.Array]:
+    """Fused (runs × λ) population evaluation in ONE kernel dispatch.
+
+    ``genomes`` carries a leading stacked axis R: nodes (R, n_n, 3), outs
+    (R, n_o).  The genome axis becomes Pallas grid dimension 0 — this
+    replaces ``jax.vmap(cgp_eval)`` over a population, which dispatched one
+    kernel per genome (or one vmap-batched program) and left the run axis
+    off the grid.  Returns (MetricPartials with leading R, pops (R, n_n)).
+
+    ``r_tile=None`` picks the genome-axis pad automatically: sublane padding
+    only helps the Mosaic lowering, while interpret mode pays every pad row
+    as a full recomputed evaluation — so 8 when compiled, 1 interpreted.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if r_tile is None:
+        r_tile = 1 if interpret else 8
+    sums, wce, hist, pops = _cgp.cgp_sim_metrics_batched(
+        genomes.nodes, genomes.outs, in_planes, golden_vals,
+        n_i=spec.n_i, n_n=spec.n_n, n_o=spec.n_o,
+        gauss_sigma=gauss_sigma, block_words=block_words,
+        r_tile=r_tile, interpret=interpret)
+    return _partials_from_sums(sums, wce, hist), pops
 
 
 def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
                interpret: bool | None = None, **tiles) -> jax.Array:
     """Approximate-multiplier emulated matmul (pads to tile multiples)."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     M_, K = a.shape
     _, N = b.shape
     bm = min(tiles.get("bm", 128), max(8, M_))
@@ -78,7 +135,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     Heads are grouped: q-heads h use kv-head h // (Hq // Hkv).
     """
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = default_interpret()
     B, Hq, Sq, D = q.shape
     _, Hkv, Skv, _ = k.shape
     group = Hq // Hkv

@@ -46,7 +46,10 @@ def main():
     ap.add_argument("--generations", type=int, default=2000)
     ap.add_argument("--lam", type=int, default=8)
     ap.add_argument("--seeds", type=int, default=1)
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
+                    help="candidate evaluation: pure-jnp or the fused "
+                         "(runs x lambda) Pallas kernel (one dispatch per "
+                         "generation in the batched engine; interpret on CPU)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="runs per jit'd batch of the sweep engine")

@@ -3,8 +3,12 @@
 The batched engine must reproduce the serial ``run_search`` loop per run
 (same PRNG streams, same evaluation semantics — genomes match bit-for-bit on
 CPU), stay invariant under chunking, and resume mid-grid from a checkpoint.
+The same guarantees hold per backend: the fused-pallas sweep path is
+bit-identical to the serial pallas loop, and (for constraints whose selection
+depends only on exact integer partials) to the jnp backend.
 """
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -147,3 +151,61 @@ def test_sweep_grid_order_matches_serial_loop():
     assert len(grid) == N_RUNS
     assert grid[0] == (CONSTRAINTS[0], 0) and grid[1] == (CONSTRAINTS[0], 1)
     assert grid[2][0] is CONSTRAINTS[1]
+
+
+# --------------------------------------------------------------------------
+# Backend parity (fused pallas kernel path, ISSUE 2)
+# --------------------------------------------------------------------------
+
+def _with_backend(backend: str):
+    return dataclasses.replace(
+        PAR_CFG, evolve=dataclasses.replace(PAR_CFG.evolve, backend=backend))
+
+
+PAR_CFG = SearchConfig(width=2, kind="add", n_n=40,
+                       evolve=EvolveConfig(generations=60, lam=3))
+PAR_CONS = [ConstraintSpec(mae=1.0), ConstraintSpec(er=50.0)]
+PAR_SEEDS = (0, 1)
+PAR_RUNS = len(PAR_CONS) * len(PAR_SEEDS)
+
+
+def _parity_backends():
+    """The CI backend-matrix leg narrows this via REPRO_TEST_BACKEND."""
+    env = os.environ.get("REPRO_TEST_BACKEND")
+    return (env,) if env in ("jnp", "pallas") else ("jnp", "pallas")
+
+
+@pytest.mark.kernel_diff
+@pytest.mark.parametrize("backend", _parity_backends())
+def test_batched_matches_serial_same_backend(backend):
+    """Per-backend equivalence oracle: the batched engine reproduces the
+    serial loop bit-for-bit with the SAME backend on both sides — for
+    "pallas" that pits the fused (runs × λ) kernel dispatch against one
+    per-generation λ-population dispatch per run."""
+    cfg = _with_backend(backend)
+    serial = run_sweep_serial(cfg, PAR_CONS, PAR_SEEDS)
+    batched = run_sweep_batched(cfg, PAR_CONS, PAR_SEEDS,
+                                SweepConfig(chunk_size=3))  # ragged chunks
+    assert batched.completed == PAR_RUNS
+    _assert_records_match(serial, batched.records)
+
+
+@pytest.mark.kernel_diff
+@pytest.mark.skipif(os.environ.get("REPRO_TEST_BACKEND") == "jnp",
+                    reason="cross-backend test; runs in the pallas CI leg")
+def test_sweep_backend_parity_with_resume(tmp_path):
+    """run_sweep(backend="pallas") matches backend="jnp" per-run, including
+    through a mid-grid checkpoint resume of the pallas sweep.  The grid is
+    mae/er-constrained, so selection depends only on exact integer partials
+    and the evolved genomes must match bit-for-bit across backends."""
+    want = run_sweep_batched(_with_backend("jnp"), PAR_CONS, PAR_SEEDS,
+                             SweepConfig(chunk_size=2))
+    sweep = SweepConfig(chunk_size=2, checkpoint_dir=str(tmp_path))
+    cfg_p = _with_backend("pallas")
+    partial = run_sweep_batched(cfg_p, PAR_CONS, PAR_SEEDS,
+                                dataclasses.replace(sweep, max_chunks=1))
+    assert partial.completed == 2 and len(partial.records) == 2
+    resumed = run_sweep_batched(cfg_p, PAR_CONS, PAR_SEEDS, sweep)
+    assert resumed.completed == PAR_RUNS
+    _assert_records_match(want.records, resumed.records)
+    np.testing.assert_array_equal(want.hist_fit, resumed.hist_fit)
