@@ -2,10 +2,11 @@
 #   make test        — tier-1 suite (the ROADMAP verify command)
 #   make test-fast   — tier-1 minus the slow multi-process tests
 #   make bench-smoke — quick benchmark pass: kernel micros + sweep engine
+#   make docs-check  — README/DESIGN link + §-reference + --help check
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast bench-smoke
+.PHONY: test test-fast bench-smoke docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,4 +15,7 @@ test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	$(PY) benchmarks/kernel_micro.py --only sweep,gen
+	$(PY) benchmarks/kernel_micro.py --only sweep,gen,results
+
+docs-check:
+	$(PY) tools/check_docs.py

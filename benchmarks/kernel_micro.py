@@ -1,9 +1,11 @@
 """Kernel microbenchmarks: fused sim+metrics throughput (the paper's hot
-loop), the unfused baseline, and the batched constraint-grid sweep engine
-vs the serial per-run loop, on this host (CPU: jnp path; the Pallas kernel
-is timed in interpret mode only for reference — its target is TPU).
+loop), the unfused baseline, the batched constraint-grid sweep engine
+vs the serial per-run loop, and the streaming results layer (shard spill +
+read-back rows/s), on this host (CPU: jnp path; the Pallas kernel is timed
+in interpret mode only for reference — its target is TPU).
 
-Script mode:  python benchmarks/kernel_micro.py [--only eval,gen,pallas,sweep]
+Script mode:
+  python benchmarks/kernel_micro.py [--only eval,gen,pallas,sweep,results]
 """
 from __future__ import annotations
 
@@ -148,12 +150,85 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
     return out
 
 
+def bench_results(n_runs: int = 2048, gens: int = 256, chunk: int = 128,
+                  n_n: int = 100, n_o: int = 8):
+    """Streaming results layer: shard spill and read-back rows/s.
+
+    Synthetic run-major buffers at realistic shapes (the per-row payload is
+    dominated by ``hist_metrics``: gens × N_METRICS floats) are committed
+    chunk-by-chunk through ``SweepResultWriter`` and drained back through
+    ``SweepResultReader`` — the host-side path that bounds paper-scale grids
+    now that the fused kernel owns the evaluation side.  "summary" read-back
+    is the figure-pipeline path (correlations + fronts from grid-order
+    summary columns); "history" read-back drains every history shard at
+    one-chunk peak memory.
+    """
+    import tempfile
+
+    from repro.core import metrics as M
+    from repro.core.results import SweepResultReader, SweepResultWriter
+
+    rng = np.random.default_rng(0)
+    rows_all = {
+        "grid_rows": np.arange(n_runs, dtype=np.int32),
+        "thresholds": rng.random((n_runs, M.N_METRICS), np.float32),
+        "parent_nodes": rng.integers(0, 99, (n_runs, n_n, 3), np.int32),
+        "parent_outs": rng.integers(0, 99, (n_runs, n_o), np.int32),
+        "best_nodes": rng.integers(0, 99, (n_runs, n_n, 3), np.int32),
+        "best_outs": rng.integers(0, 99, (n_runs, n_o), np.int32),
+        "best_fit": rng.random(n_runs, np.float32),
+        "metrics": rng.random((n_runs, M.N_METRICS), np.float32),
+        "power_rel": rng.random(n_runs, np.float32),
+        "feasible": rng.integers(0, 2, n_runs, np.uint8),
+        "error_mean": rng.random(n_runs, np.float32),
+        "error_std": rng.random(n_runs, np.float32),
+        "hist_power_rel": rng.random((n_runs, gens), np.float32),
+        "hist_fit": rng.random((n_runs, gens), np.float32),
+        "hist_metrics": rng.random((n_runs, gens, M.N_METRICS), np.float32),
+    }
+    grid_meta = [{"constraint": f"mae<={i % 7}%", "seed": i,
+                  "gauss_sigma": 256.0} for i in range(n_runs)]
+    with tempfile.TemporaryDirectory() as d:
+        writer = SweepResultWriter(
+            d, grid_fingerprint="bench", grid_meta=grid_meta, n_runs=n_runs,
+            gens=gens, n_n=n_n, n_o=n_o, keep_history="summary",
+            chunk_size=chunk)
+        t0 = time.perf_counter()
+        for start in range(0, n_runs, chunk):
+            end = min(start + chunk, n_runs)
+            writer.write_chunk(
+                (start, end),
+                {k: v[start:end] for k, v in rows_all.items()})
+        t_spill = time.perf_counter() - t0
+
+        reader = SweepResultReader(d)
+        t0 = time.perf_counter()
+        reader.correlations()
+        reader.fronts()
+        t_summary = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        drained = 0
+        for rows, hist in reader.iter_history():
+            drained += hist["hist_metrics"].shape[0]
+        t_hist = time.perf_counter() - t0
+        assert drained == n_runs
+
+    row_bytes = sum(v.nbytes for v in rows_all.values()) / n_runs
+    return {
+        "spill_rows_per_s": n_runs / t_spill,
+        "spill_mb_per_s": n_runs * row_bytes / t_spill / 2**20,
+        "summary_readback_rows_per_s": n_runs / t_summary,
+        "history_readback_rows_per_s": n_runs / t_hist,
+        "row_kb": row_bytes / 1024,
+    }
+
+
 def main(argv=None):
     import argparse
     import functools
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: eval,gen,pallas,sweep")
+                    help="comma list: eval,gen,pallas,sweep,results")
     ap.add_argument("--backend", default="jnp,pallas",
                     help="comma list of sweep-engine backends to time "
                          "(--only sweep axis; default: jnp,pallas)")
@@ -164,7 +239,8 @@ def main(argv=None):
         ap.error(f"unknown backend(s): {sorted(unknown)}")
     benches = {"eval": bench_eval_throughput, "gen": bench_generation_rate,
                "pallas": bench_pallas_interpret,
-               "sweep": functools.partial(bench_sweep, backends=backends)}
+               "sweep": functools.partial(bench_sweep, backends=backends),
+               "results": bench_results}
     if only is not None and (unknown := only - set(benches)):
         ap.error(f"unknown bench name(s): {sorted(unknown)} "
                  f"(choose from {sorted(benches)})")

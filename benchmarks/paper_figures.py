@@ -1,4 +1,5 @@
-"""One experiment per paper figure (reduced budget; see DESIGN.md §2).
+"""One experiment per paper figure, sliced from ONE shared sweep grid
+(reduced budget; see DESIGN.md §2).
 
 The paper gives every CGP run 1 hour on a 14-core Xeon (~10^6 evaluations);
 this container is a single CPU core, so each figure uses the same protocol at
@@ -7,10 +8,24 @@ sweeps, 8-bit for the headline comparisons).  What must REPRODUCE is the
 *qualitative* claim of each figure (ER antagonism, ACC0 ~free, combined
 ER+MAE/WCE winning globally, …); each fig_* function returns rows AND a
 `claims` dict of booleans checked against the paper's statements.
+
+Execution model (DESIGN.md §3): every figure except Fig. 14 declares its
+constraint list up front; the union is deduplicated into ONE grid, executed
+once through ``search.run_sweep`` with the streaming results layer
+(``keep_history="summary"``, shards under ``RESULTS_DIR/grids/``), and each
+figure slices its rows from the ``SweepResultReader``.  A run's result
+depends only on its ``(constraint, seed)`` pair (per-run PRNG streams), so
+the slices are bit-identical to what per-figure sweeps would produce — but
+shared rows (e.g. the wce≤0.5..2 sweeps of Figs. 6/8/9) are evolved once,
+and an interrupted figure pass resumes mid-grid from the shard set.
+Fig. 14 runs its own grid (8-bit, 2.5× budget) through the same machinery.
+
+Each figure JSON is stamped with the source grid's fingerprint and the
+budget knobs, so a committed artifact that no longer matches the code or
+budget that would regenerate it is detectable (DESIGN.md §3.4).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
@@ -21,6 +36,7 @@ from repro.core import metrics as M
 from repro.core.evolve import EvolveConfig
 from repro.core.fitness import ConstraintSpec
 from repro.core.pareto import hypervolume_2d, metric_correlations, pareto_points
+from repro.core.results import SweepResultReader
 from repro.core.search import CircuitRecord, SearchConfig, run_sweep
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/paper")
@@ -31,6 +47,7 @@ WIDTH = int(os.environ.get("REPRO_BENCH_WIDTH", "6"))
 GENS = int(os.environ.get("REPRO_BENCH_GENS", "1200"))
 LAM = int(os.environ.get("REPRO_BENCH_LAM", "8"))
 SEEDS = tuple(range(int(os.environ.get("REPRO_BENCH_SEEDS", "3"))))
+CHUNK = int(os.environ.get("REPRO_BENCH_CHUNK", "32"))
 NODES = 400 if WIDTH >= 8 else 250
 
 
@@ -41,14 +58,130 @@ def _cfg(gens=None, width=None, n_n=None) -> SearchConfig:
                                             lam=LAM))
 
 
-def _sweep(constraints, gens=None, seeds=SEEDS, width=None
-           ) -> list[CircuitRecord]:
-    return run_sweep(_cfg(gens, width), constraints, seeds=seeds)
+# --------------------------------------------------------------------------
+# Per-figure constraint declarations (the shared grid is their union)
+# --------------------------------------------------------------------------
+
+FIG5_CONS = [ConstraintSpec(avg=t) for t in (0.01, 0.1, 1.0)]
+FIG6_WCE = [ConstraintSpec(wce=t) for t in (0.1, 0.5, 1.0, 2.0, 5.0)]
+FIG6_MAE = [ConstraintSpec(mae=t) for t in (0.05, 0.1, 0.5, 1.0, 2.0)]
+FIG7_SWEEPS = {
+    "mae": [ConstraintSpec(mae=t) for t in (0.05, 0.2, 0.5, 1.0, 2.0)],
+    "wce": [ConstraintSpec(wce=t) for t in (0.2, 0.5, 1.0, 2.0, 5.0)],
+    "er": [ConstraintSpec(er=t) for t in (10, 25, 50, 75, 90)],
+    "mre": [ConstraintSpec(mre=t) for t in (1, 5, 10, 25, 50)],
+}
+FIG8_TS = (0.2, 0.5, 1.0, 2.0)
+FIG8_PLAIN = [ConstraintSpec(wce=t) for t in FIG8_TS]
+FIG8_ACC0 = [ConstraintSpec(wce=t, acc0=True) for t in FIG8_TS]
+FIG9_TS = (0.5, 1.0, 2.0)
+FIG9_PLAIN = [ConstraintSpec(wce=t) for t in FIG9_TS]
+FIG9_TIGHT = [ConstraintSpec(wce=t, avg=0.01) for t in FIG9_TS]
+FIG9_LOOSE = [ConstraintSpec(wce=t, avg=0.2) for t in FIG9_TS]
+FIG10_COMBOS = ([ConstraintSpec(er=e, mae=m) for e in (30, 50, 70)
+                 for m in (0.2, 1.0)] +
+                [ConstraintSpec(er=e, wce=w) for e in (30, 50, 70)
+                 for w in (0.5, 2.0)])
+FIG11_CONS = [ConstraintSpec(wce=w, mre=m)
+              for w in (0.5, 2.0) for m in (2.0, 10.0, 50.0)]
+_SIGMA_REL = {6: 1.0, 8: 4.0}.get(WIDTH, 1.0)
+FIG12_GAUSS = [ConstraintSpec(wce=w, gauss=True, gauss_sigma=s * _SIGMA_REL)
+               for w in (1.0, 2.0) for s in (2.0, 8.0)]
+FIG12_MAE_AVG = [ConstraintSpec(mae=m, avg=0.05) for m in (0.2, 0.5, 1.0)]
+
+FIG14_STRATEGIES = {
+    "mae": [ConstraintSpec(mae=t) for t in (0.2, 0.5, 1.5)],
+    "wce": [ConstraintSpec(wce=t) for t in (0.5, 2.0, 5.0)],
+    "er": [ConstraintSpec(er=t) for t in (30, 50, 70)],
+    "mre": [ConstraintSpec(mre=t) for t in (5, 10, 25)],
+    "er+mae": [ConstraintSpec(er=e, mae=m)
+               for e in (50, 70) for m in (0.5, 1.5)],
+    "er+wce": [ConstraintSpec(er=e, wce=w)
+               for e in (50, 70) for w in (2.0, 5.0)],
+}
 
 
-def _save(name: str, rows: list[dict], claims: dict) -> dict:
+def shared_constraints() -> list[ConstraintSpec]:
+    """Deduplicated union of every shared-grid figure's constraints, in
+    first-appearance order (the grid's run order)."""
+    groups = ([FIG5_CONS, FIG6_WCE, FIG6_MAE] + list(FIG7_SWEEPS.values())
+              + [FIG8_PLAIN, FIG8_ACC0, FIG9_PLAIN, FIG9_TIGHT, FIG9_LOOSE,
+                 FIG10_COMBOS, FIG11_CONS, FIG12_GAUSS, FIG12_MAE_AVG])
+    out, seen = [], set()
+    for cons in groups:
+        for c in cons:
+            key = (c.describe(), float(c.gauss_sigma))
+            if key not in seen:
+                seen.add(key)
+                out.append(c)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Shared-grid execution (run once, slice per figure from the reader)
+# --------------------------------------------------------------------------
+
+_READER_CACHE: dict[str, SweepResultReader] = {}
+
+
+def _grid_reader(tag: str, cfg: SearchConfig,
+                 constraints: list[ConstraintSpec],
+                 seeds: tuple) -> SweepResultReader:
+    """Execute a grid once through the streaming results layer and return
+    its reader.  The shard directory is namespaced by the grid fingerprint,
+    so a budget/code change gets a fresh directory while an identical rerun
+    (or an interrupted pass) resumes from the committed shards."""
+    from repro.core.sweep import SweepConfig, grid_fingerprint, sweep_grid
+    fp = grid_fingerprint(cfg, sweep_grid(constraints, seeds), "summary")
+    # chunk size is pinned in the shard manifest (spans are the chunked
+    # execution partition), so it namespaces the directory alongside the
+    # grid fingerprint — changing REPRO_BENCH_CHUNK gets a fresh grid dir
+    rdir = os.path.join(RESULTS_DIR, "grids", f"{tag}-{fp[:12]}-c{CHUNK}")
+    if rdir not in _READER_CACHE:
+        run_sweep(cfg, constraints, seeds=seeds,
+                  sweep=SweepConfig(chunk_size=CHUNK, keep_history="summary",
+                                    results_dir=rdir))
+        _READER_CACHE[rdir] = SweepResultReader(rdir)
+    return _READER_CACHE[rdir]
+
+
+def shared_reader() -> SweepResultReader:
+    """The ONE grid behind Figs. 5-12 at the (WIDTH, GENS, SEEDS) budget."""
+    return _grid_reader("shared", _cfg(), shared_constraints(), SEEDS)
+
+
+def fig14_reader() -> SweepResultReader:
+    """Fig. 14's own grid: the paper's exact operating point (8x8, n_n=400)
+    at 2.5x the generation budget, one seed."""
+    cons = [c for cs in FIG14_STRATEGIES.values() for c in cs]
+    return _grid_reader("fig14", _cfg(gens=int(2.5 * GENS), width=8),
+                        cons, SEEDS[:1])
+
+
+_RECORD_INDEX: dict[str, dict] = {}
+
+
+def _select(reader: SweepResultReader, constraints: list[ConstraintSpec],
+            seeds: tuple = SEEDS) -> list[CircuitRecord]:
+    """Slice a figure's records out of a grid reader, in the order a
+    dedicated ``run_sweep(constraints, seeds)`` would return them.  The
+    (constraint, seed) -> record index is built once per grid directory —
+    figures slice it ~20 times per pass, and rebuilding it would re-read
+    the whole shard set each time."""
+    if reader.results_dir not in _RECORD_INDEX:
+        _RECORD_INDEX[reader.results_dir] = {
+            (r.constraint, r.seed): r for r in reader.records()}
+    index = _RECORD_INDEX[reader.results_dir]
+    return [index[(c.describe(), s)] for c in constraints for s in seeds]
+
+
+def _save(name: str, rows: list[dict], claims: dict,
+          reader: SweepResultReader | None = None) -> dict:
     os.makedirs(RESULTS_DIR, exist_ok=True)
     out = {"figure": name, "width": WIDTH, "gens": GENS, "lam": LAM,
+           "grid_fingerprint": reader.fingerprint if reader else None,
+           "budget": {"width": WIDTH, "gens": GENS, "lam": LAM,
+                      "seeds": len(SEEDS), "nodes": NODES, "chunk": CHUNK},
            "rows": rows, "claims": claims}
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
         json.dump(out, f, indent=1)
@@ -71,9 +204,8 @@ def _rows(recs: list[CircuitRecord]) -> list[dict]:
 # --------------------------------------------------------------------------
 
 def fig5_avg_only():
-    recs = _sweep([ConstraintSpec(avg=t) for t in (0.01, 0.1, 1.0)],
-                  gens=GENS)
-    rows = _rows(recs)
+    grid = shared_reader()
+    rows = _rows(_select(grid, FIG5_CONS))
     # degenerate: massive power reduction with terrible WCE/MAE
     deg = [r for r in rows if r["feasible"] and r["power_rel"] < 0.4]
     claims = {
@@ -81,7 +213,7 @@ def fig5_avg_only():
         "avg_only_wce_useless": all(r["wce"] > 5.0 for r in deg) if deg
         else False,
     }
-    return _save("fig5_avg_only", rows, claims)
+    return _save("fig5_avg_only", rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -89,10 +221,9 @@ def fig5_avg_only():
 # --------------------------------------------------------------------------
 
 def fig6_correlations():
-    wce_recs = _sweep([ConstraintSpec(wce=t)
-                       for t in (0.1, 0.5, 1.0, 2.0, 5.0)])
-    mae_recs = _sweep([ConstraintSpec(mae=t)
-                       for t in (0.05, 0.1, 0.5, 1.0, 2.0)])
+    grid = shared_reader()
+    wce_recs = _select(grid, FIG6_WCE)
+    mae_recs = _select(grid, FIG6_MAE)
 
     def corr_matrix(recs):
         cols = [M.MAE, M.WCE, M.ER, M.MRE, M.AVG]
@@ -125,7 +256,7 @@ def fig6_correlations():
         "wce_within_order_of_paper_3.2x_bound": bool(0 < ratio <= 32.0),
         "max_wce_over_mae_ratio": float(ratio),
     }
-    return _save("fig6_correlations", rows, claims)
+    return _save("fig6_correlations", rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -134,17 +265,11 @@ def fig6_correlations():
 # --------------------------------------------------------------------------
 
 def fig7_single_metric_tradeoffs():
-    sweeps = {
-        "mae": [ConstraintSpec(mae=t) for t in (0.05, 0.2, 0.5, 1.0, 2.0)],
-        "wce": [ConstraintSpec(wce=t) for t in (0.2, 0.5, 1.0, 2.0, 5.0)],
-        "er": [ConstraintSpec(er=t) for t in (10, 25, 50, 75, 90)],
-        "mre": [ConstraintSpec(mre=t) for t in (1, 5, 10, 25, 50)],
-    }
+    grid = shared_reader()
     all_rows = []
     by_obj = {}
-    for obj, cons in sweeps.items():
-        recs = _sweep(cons)
-        rows = _rows(recs)
+    for obj, cons in FIG7_SWEEPS.items():
+        rows = _rows(_select(grid, cons))
         for r in rows:
             r["objective"] = obj
         by_obj[obj] = [r for r in rows if r["feasible"]]
@@ -168,7 +293,7 @@ def fig7_single_metric_tradeoffs():
         "hv_er_on_er": hv_er_on_er, "hv_mae_on_er": hv_mae_on_er,
         "hv_mae_on_mae": hv_mae_on_mae, "hv_er_on_mae": hv_er_on_mae,
     }
-    return _save("fig7_single_metric_tradeoffs", all_rows, claims)
+    return _save("fig7_single_metric_tradeoffs", all_rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -176,9 +301,9 @@ def fig7_single_metric_tradeoffs():
 # --------------------------------------------------------------------------
 
 def fig8_acc0():
-    ts = (0.2, 0.5, 1.0, 2.0)
-    plain = _sweep([ConstraintSpec(wce=t) for t in ts])
-    with0 = _sweep([ConstraintSpec(wce=t, acc0=True) for t in ts])
+    grid = shared_reader()
+    plain = _select(grid, FIG8_PLAIN)
+    with0 = _select(grid, FIG8_ACC0)
     rows = _rows(plain) + _rows(with0)
     p_med = np.median([r.power_rel for r in plain if r.feasible])
     a_med = np.median([r.power_rel for r in with0 if r.feasible])
@@ -189,7 +314,7 @@ def fig8_acc0():
         "all_acc0_circuits_exact_on_zero": all(
             r.metrics[M.ACC0] == 1 for r in with0 if r.feasible),
     }
-    return _save("fig8_acc0", rows, claims)
+    return _save("fig8_acc0", rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -197,10 +322,10 @@ def fig8_acc0():
 # --------------------------------------------------------------------------
 
 def fig9_wce_avg():
-    ts = (0.5, 1.0, 2.0)
-    plain = _sweep([ConstraintSpec(wce=t) for t in ts])
-    tight = _sweep([ConstraintSpec(wce=t, avg=0.01) for t in ts])
-    loose = _sweep([ConstraintSpec(wce=t, avg=0.2) for t in ts])
+    grid = shared_reader()
+    plain = _select(grid, FIG9_PLAIN)
+    tight = _select(grid, FIG9_TIGHT)
+    loose = _select(grid, FIG9_LOOSE)
     rows = _rows(plain) + _rows(tight) + _rows(loose)
     med = lambda rs: float(np.median([r.power_rel for r in rs
                                       if r.feasible]) if any(
@@ -210,7 +335,7 @@ def fig9_wce_avg():
         "power_plain": med(plain), "power_avg_tight": med(tight),
         "power_avg_loose": med(loose),
     }
-    return _save("fig9_wce_avg", rows, claims)
+    return _save("fig9_wce_avg", rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -218,12 +343,8 @@ def fig9_wce_avg():
 # --------------------------------------------------------------------------
 
 def fig10_er_combos():
-    combos = ([ConstraintSpec(er=e, mae=m) for e in (30, 50, 70)
-               for m in (0.2, 1.0)] +
-              [ConstraintSpec(er=e, wce=w) for e in (30, 50, 70)
-               for w in (0.5, 2.0)])
-    recs = _sweep(combos)
-    rows = _rows(recs)
+    grid = shared_reader()
+    rows = _rows(_select(grid, FIG10_COMBOS))
     # paper: with ER<=30 the MAE stays low even when unconstrained-ish
     er30 = [r for r in rows if r["feasible"] and "er<=30" in r["constraint"]]
     claims = {
@@ -231,7 +352,7 @@ def fig10_er_combos():
         if er30 else False,
         "feasible_fraction": float(np.mean([r["feasible"] for r in rows])),
     }
-    return _save("fig10_er_combos", rows, claims)
+    return _save("fig10_er_combos", rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -239,13 +360,12 @@ def fig10_er_combos():
 # --------------------------------------------------------------------------
 
 def fig11_wce_mre():
-    recs = _sweep([ConstraintSpec(wce=w, mre=m)
-                   for w in (0.5, 2.0) for m in (2.0, 10.0, 50.0)])
-    rows = _rows(recs)
+    grid = shared_reader()
+    rows = _rows(_select(grid, FIG11_CONS))
     claims = {"all_respect_both": all(
         (r["wce"] <= 2.0 + 1e-3 and r["mre"] <= 50 + 1e-3)
         for r in rows if r["feasible"])}
-    return _save("fig11_wce_mre", rows, claims)
+    return _save("fig11_wce_mre", rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -254,12 +374,9 @@ def fig11_wce_mre():
 # --------------------------------------------------------------------------
 
 def fig12_gauss():
-    sigma_rel = {6: 1.0, 8: 4.0}.get(WIDTH, 1.0)
-    gauss = _sweep([ConstraintSpec(wce=w, gauss=True,
-                                   gauss_sigma=s * sigma_rel)
-                    for w in (1.0, 2.0) for s in (2.0, 8.0)])
-    mae_avg = _sweep([ConstraintSpec(mae=m, avg=0.05)
-                      for m in (0.2, 0.5, 1.0)])
+    grid = shared_reader()
+    gauss = _select(grid, FIG12_GAUSS)
+    mae_avg = _select(grid, FIG12_MAE_AVG)
     rows = _rows(gauss) + [dict(r, set="mae_avg") for r in _rows(mae_avg)]
     med = lambda rs: float(np.median([r.power_rel for r in rs if r.feasible])
                            if any(r.feasible for r in rs) else 1.0)
@@ -269,7 +386,7 @@ def fig12_gauss():
         "mae_avg_near_zero_mean": all(
             abs(r.error_mean) < 50 for r in mae_avg if r.feasible),
     }
-    return _save("fig12_gauss", rows, claims)
+    return _save("fig12_gauss", rows, claims, grid)
 
 
 # --------------------------------------------------------------------------
@@ -287,22 +404,11 @@ def fig14_global_pareto():
     (8x8 multiplier, n_n=400, exhaustive 2^16) with 2.5x the generation
     budget (equal across strategies; the ER/MAE antagonism the paper
     reports is much weaker at reduced widths)."""
-    strategies = {
-        "mae": [ConstraintSpec(mae=t) for t in (0.2, 0.5, 1.5)],
-        "wce": [ConstraintSpec(wce=t) for t in (0.5, 2.0, 5.0)],
-        "er": [ConstraintSpec(er=t) for t in (30, 50, 70)],
-        "mre": [ConstraintSpec(mre=t) for t in (5, 10, 25)],
-        "er+mae": [ConstraintSpec(er=e, mae=m)
-                   for e in (50, 70) for m in (0.5, 1.5)],
-        "er+wce": [ConstraintSpec(er=e, wce=w)
-                   for e in (50, 70) for w in (2.0, 5.0)],
-    }
+    grid = fig14_reader()
     rows = []
     hv = {}
-    for name, cons in strategies.items():
-        recs = _sweep(cons, gens=int(2.5 * GENS), seeds=SEEDS[:1],
-                      width=8)
-        rs = _rows(recs)
+    for name, cons in FIG14_STRATEGIES.items():
+        rs = _rows(_select(grid, cons, seeds=SEEDS[:1]))
         for r in rs:
             r["strategy"] = name
         rows += rs
@@ -314,12 +420,12 @@ def fig14_global_pareto():
             hv[f"{name}|{metric}"] = hypervolume_2d(pts, ref)
 
     def norm(name, metric):
-        best = max(hv[f"{s}|{metric}"] for s in strategies) or 1.0
+        best = max(hv[f"{s}|{metric}"] for s in FIG14_STRATEGIES) or 1.0
         return hv[f"{name}|{metric}"] / best
 
     scores = {n: float(np.mean([norm(n, m) for m in
                                 ("mae", "wce", "er", "mre")]))
-              for n in strategies}
+              for n in FIG14_STRATEGIES}
 
     # The paper's global-quality argument, programmatically: at each ER
     # level, the ER+MAE/ER+WCE circuit matches the ER-only circuit's power
@@ -360,7 +466,7 @@ def fig14_global_pareto():
             norm("mre", "mae") >= 0.3 and norm("mre", "wce") >= 0.15),
         "scores_mean": scores, "hypervolumes": hv,
     }
-    return _save("fig14_global_pareto", rows, claims)
+    return _save("fig14_global_pareto", rows, claims, grid)
 
 
 ALL_FIGURES = [fig5_avg_only, fig6_correlations, fig7_single_metric_tradeoffs,

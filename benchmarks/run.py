@@ -52,9 +52,14 @@ def main() -> None:
         emit("cgp_pallas_interpret_ms", 1e3 * r["pallas_interpret_ms"],
              f"jnp_ref_ms={r['jnp_ref_ms']:.1f}")
         r = kernel_micro.bench_sweep()
-        emit("sweep_batched_run", 1e6 / max(r["batched_runs_per_s"], 1e-9),
-             f"runs_per_s={r['batched_runs_per_s']:.2f},"
-             f"speedup_vs_serial={r['batched_speedup']:.2f}")
+        emit("sweep_batched_run", 1e6 / max(r["batched_jnp_runs_per_s"], 1e-9),
+             f"runs_per_s={r['batched_jnp_runs_per_s']:.2f},"
+             f"speedup_vs_serial={r['batched_jnp_speedup']:.2f}")
+        r = kernel_micro.bench_results()
+        emit("results_shard_spill", 1e6 / max(r["spill_rows_per_s"], 1e-9),
+             f"spill_mb_per_s={r['spill_mb_per_s']:.1f},"
+             f"summary_readback_rows_per_s="
+             f"{r['summary_readback_rows_per_s']:.0f}")
 
     # paper figures ----------------------------------------------------------
     fig_map = {f.__name__.split("_")[0]: f
@@ -73,12 +78,27 @@ def main() -> None:
 
     if claims_all:
         import os
-        os.makedirs("experiments/paper", exist_ok=True)
-        with open("experiments/paper/claims_summary.json", "w") as f:
+        # stamp the summary with the shard-grid fingerprints the figures
+        # were sliced from (paper_figures runs every figure through the
+        # streaming SweepResultReader), so stale artifacts are detectable
+        claims_all["_meta"] = {
+            "grid_fingerprints": sorted(
+                {d.rsplit(os.sep, 1)[-1]
+                 for d in paper_figures._READER_CACHE}),
+            "budget": {"width": paper_figures.WIDTH,
+                       "gens": paper_figures.GENS,
+                       "lam": paper_figures.LAM,
+                       "seeds": len(paper_figures.SEEDS)},
+        }
+        os.makedirs(paper_figures.RESULTS_DIR, exist_ok=True)
+        summary_path = os.path.join(paper_figures.RESULTS_DIR,
+                                    "claims_summary.json")
+        with open(summary_path, "w") as f:
             json.dump(claims_all, f, indent=1, default=str)
+        figs = {k: v for k, v in claims_all.items() if k != "_meta"}
         n_ok = sum(all(v for v in c.values() if isinstance(v, bool))
-                   for c in claims_all.values())
-        print(f"# paper-claim check: {n_ok}/{len(claims_all)} figures "
+                   for c in figs.values())
+        print(f"# paper-claim check: {n_ok}/{len(figs)} figures "
               f"reproduce their qualitative claims", flush=True)
 
 

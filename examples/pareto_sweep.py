@@ -29,6 +29,10 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=32)
     ap.add_argument("--checkpoint-dir", default=None,
                     help="resume an interrupted sweep from here")
+    ap.add_argument("--results-dir", default=None,
+                    help="stream per-chunk result shards here (resumable; "
+                         "histories spill to disk, host memory stays flat) "
+                         "and read the fronts back through SweepResultReader")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
                     help="candidate evaluation: pure-jnp or the fused "
                          "(runs x lambda) Pallas kernel (interpret on CPU)")
@@ -47,13 +51,20 @@ def main():
     for name, cons in strategies.items():
         ckpt = (f"{args.checkpoint_dir}/{name}" if args.checkpoint_dir
                 else None)
+        rdir = (f"{args.results_dir}/{name}" if args.results_dir else None)
         res = run_sweep_batched(
             cfg, cons, seeds=range(args.seeds),
             sweep=SweepConfig(chunk_size=args.chunk_size,
-                              checkpoint_dir=ckpt, keep_history=False))
-        results[name] = [r for r in res.records if r.feasible]
+                              checkpoint_dir=ckpt, results_dir=rdir,
+                              keep_history="summary" if rdir else "none"))
+        # with --results-dir the records come back through the on-disk
+        # shard reader — the same rows the in-RAM path returns
+        recs = res.reader().records() if rdir else res.records
+        results[name] = [r for r in recs if r.feasible]
         print(f"[{name}] {len(results[name])} feasible circuits "
-              f"@ {res.runs_per_sec:.2f} runs/s")
+              f"@ {res.runs_per_sec:.2f} runs/s"
+              + (f" -> {len(res.reader().spans())} shards in {rdir}"
+                 if rdir else ""))
 
     for metric, idx in (("MAE%", M.MAE), ("ER%", M.ER)):
         print(f"\n=== power vs {metric} Pareto fronts ===")

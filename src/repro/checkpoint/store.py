@@ -27,6 +27,25 @@ Tree = Any
 _MARKER = "_COMPLETE"
 
 
+def atomic_write_json(path: str, obj: Any) -> None:
+    """Write JSON through a temp file + rename so readers never observe a
+    partially-written file (shared by the checkpoint manifests and the
+    streaming results layer in ``core.results``)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    os.replace(tmp, path)
+
+
+def atomic_save_npz(path: str, arrays: dict[str, np.ndarray]) -> None:
+    """Atomically commit an ``.npz`` bundle: the file either exists complete
+    or not at all, so presence alone is the commit marker (the results-layer
+    shards rely on this — no ``_COMPLETE`` sidecar needed per shard)."""
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+
+
 def _leaf_paths(tree: Tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
@@ -54,8 +73,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Tree,
         np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
         manifest["leaves"].append(
             {"shape": list(arr.shape), "dtype": str(arr.dtype)})
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+    atomic_write_json(os.path.join(tmp, "manifest.json"), manifest)
     with open(os.path.join(tmp, _MARKER), "w") as f:
         f.write("ok")
     if os.path.exists(final):

@@ -1,9 +1,14 @@
 """Pareto-front utilities for the trade-off analyses (paper Figs. 7-14).
 
-Besides the front/hypervolume primitives, this module holds the results layer
-of the batched sweep engine (``core.sweep``): cross-metric correlation
-matrices (Fig. 6) and per-metric power-vs-error fronts over a stacked
-``(n_runs, N_METRICS)`` sweep output (Figs. 7-14).
+Besides the front/hypervolume primitives, this module holds the analysis end
+of the sweep results path: cross-metric correlation matrices (Fig. 6) and
+per-metric power-vs-error fronts (Figs. 7-14) over stacked ``(n_runs,
+N_METRICS)`` summary columns.  Both the in-RAM ``sweep.SweepResult`` and the
+on-disk ``results.SweepResultReader`` feed these functions the same arrays
+(the reader scatters only the few-floats-per-run summary columns back to
+grid order, never the per-generation histories), so the two paths are
+bit-identical; ``benchmarks/paper_figures.py`` consumes them through the
+reader of one shared sweep grid.
 """
 from __future__ import annotations
 
@@ -51,11 +56,14 @@ def metric_correlations(metrics: np.ndarray) -> np.ndarray:
     """|Pearson| correlation across metric columns (paper Fig. 6).
 
     Args:
-      metrics: (N, K) stacked metric vectors (e.g. ``SweepResult.metrics``).
+      metrics: (N, K) stacked per-run metric vectors, one column per metric
+        in ``metrics.METRIC_NAMES`` order — ``SweepResult.metrics[mask]`` or
+        the ``"metrics"`` column of ``results.SweepResultReader.summary()``
+        (``SweepResultReader.correlations`` does the masking for you).
     Returns:
-      (K, K) symmetric matrix with unit diagonal.  Zero-variance columns and
-      N < 3 give zero off-diagonals instead of NaNs (a constant metric is
-      uninformative, not perfectly correlated).
+      (K, K) symmetric float64 matrix with unit diagonal.  Zero-variance
+      columns and N < 3 give zero off-diagonals instead of NaNs (a constant
+      metric is uninformative, not perfectly correlated).
     """
     X = np.asarray(metrics, dtype=np.float64)
     k = X.shape[1] if X.ndim == 2 else 0
@@ -73,10 +81,15 @@ def sweep_fronts(power: np.ndarray, metrics: np.ndarray,
     """Power-vs-metric Pareto fronts of a sweep (paper Figs. 7-14 axes).
 
     Args:
-      power:   (N,) relative power per run.
-      metrics: (N, K) final metric vectors per run.
+      power:   (N,) relative power per run (``power(C)/power(G)``).
+      metrics: (N, K) final metric vectors per run, columns in
+        ``metrics.METRIC_NAMES`` order.
+      metric_indices: which metric columns to build fronts for (e.g.
+        ``(metrics.MAE, metrics.ER)``).
     Returns:
-      {metric index: (M, 2) sorted front of (power_rel, metric) points}.
+      {metric index: (M, 2) front of (power_rel, metric value) points,
+      sorted by power} — both objectives minimized; rows with NaN/inf never
+      enter a front.
     """
     power = np.asarray(power, dtype=np.float64)
     metrics = np.asarray(metrics, dtype=np.float64)

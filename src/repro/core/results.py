@@ -1,0 +1,413 @@
+"""Streaming sweep-results layer: on-disk shard spill + lazy read-back.
+
+``SweepResult`` used to be the only results surface of the batched sweep
+engine (``core.sweep``): every per-run summary AND every per-generation
+history lived in host RAM for the whole grid.  At the paper's scale (~27k
+runs × thousands of generations × ``N_METRICS`` floats) the histories alone
+are tens of GB — with the fused (runs × λ) kernel the evaluation side is no
+longer the bottleneck, host-side result handling is.  This module moves the
+results path to disk:
+
+  * ``SweepResultWriter`` — called by ``sweep.run_sweep_batched`` after every
+    finished chunk; commits the chunk's rows as ONE append-only ``.npz``
+    shard (atomic tmp + rename, presence == committed).  Shards are run-major
+    and named by their execution-order span, so a re-run of the same grid
+    overwrites a shard with bit-identical bytes instead of duplicating rows.
+  * ``SweepResultReader`` — lazily iterates shards.  Per-run summary columns
+    (``(n_runs,)`` / ``(n_runs, N_METRICS)``) are tiny and are scattered back
+    to grid order on demand; per-generation histories are only ever yielded
+    one shard at a time (``iter_history``), so peak host memory stays
+    independent of grid size.  ``correlations()`` / ``fronts()`` feed
+    ``core.pareto`` with exactly the arrays the in-RAM path would build —
+    results are bit-identical.
+
+Schema: a ``manifest.json`` (written once, atomically) pins the grid
+fingerprint (same identity ``checkpoint/store`` checkpoints are guarded by),
+a schema fingerprint (field names/dtypes/shapes + version), the history mode
+and the chunk size.  The chunk size is pinned because shard spans are the
+deterministic ``sweep.plan_chunks`` partition of the σ-grouped execution
+order — resuming with a different chunk size would produce overlapping
+spans, so the writer refuses it.
+
+The shard set doubles as the sweep's resume state: ``restore`` scatters the
+contiguous committed prefix back into the driver's summary buffers, so a
+``results_dir`` sweep resumes mid-grid even without a ``checkpoint_dir``
+(and, because shards commit every chunk while checkpoints commit every
+``checkpoint_every`` chunks, shards are never staler than the checkpoint).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+import shutil
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.checkpoint.store import atomic_save_npz, atomic_write_json
+from repro.core import metrics as M
+
+SCHEMA_VERSION = 1
+MANIFEST = "manifest.json"
+HISTORY_MODES = ("none", "summary", "full")
+_SHARD_RE = re.compile(r"^shard_(\d{8})_(\d{8})\.npz$")
+
+#: summary fields present in every shard: name -> (trailing shape spec, dtype)
+#: (leading axis is always the row axis; symbolic dims are resolved against
+#: the manifest at write/read time)
+SUMMARY_FIELDS = {
+    "grid_rows": ((), "int32"),            # grid-order index of each row
+    "thresholds": (("n_metrics",), "float32"),
+    "parent_nodes": (("n_n", 3), "int32"),
+    "parent_outs": (("n_o",), "int32"),
+    "best_nodes": (("n_n", 3), "int32"),
+    "best_outs": (("n_o",), "int32"),
+    "best_fit": ((), "float32"),
+    "metrics": (("n_metrics",), "float32"),
+    "power_rel": ((), "float32"),
+    "feasible": ((), "uint8"),
+    "error_mean": ((), "float32"),
+    "error_std": ((), "float32"),
+}
+
+#: per-generation history fields, present when ``keep_history != "none"``
+HISTORY_FIELDS = {
+    "hist_power_rel": (("gens",), "float32"),
+    "hist_fit": (("gens",), "float32"),
+    "hist_metrics": (("gens", "n_metrics"), "float32"),
+}
+
+
+def normalize_history_mode(keep_history) -> str:
+    """Map the legacy bool knob onto the mode string (True -> "full",
+    False -> "none"); validate strings against ``HISTORY_MODES``."""
+    if keep_history is True:
+        return "full"
+    if keep_history is False:
+        return "none"
+    if keep_history not in HISTORY_MODES:
+        raise ValueError(
+            f"keep_history must be one of {HISTORY_MODES} (or a legacy "
+            f"bool), got {keep_history!r}")
+    return keep_history
+
+
+def shard_fields(keep_history: str) -> dict:
+    """The shard schema of a history mode: summary always, histories on disk
+    for both "summary" and "full" (the modes only differ in what the driver
+    keeps in RAM)."""
+    fields = dict(SUMMARY_FIELDS)
+    if keep_history != "none":
+        fields.update(HISTORY_FIELDS)
+    return fields
+
+
+def schema_fingerprint(keep_history: str, dims: dict[str, int]) -> str:
+    """Identity of the shard layout: version + field names/shapes/dtypes +
+    the resolved symbolic dims.  Stored in the manifest next to the grid
+    fingerprint; a mismatch means the directory holds shards this code (or
+    this grid geometry) cannot extend."""
+    ident = {
+        "version": SCHEMA_VERSION,
+        "fields": {k: [list(s), d] for k, (s, d)
+                   in sorted(shard_fields(keep_history).items())},
+        "dims": {k: int(v) for k, v in sorted(dims.items())},
+    }
+    return hashlib.sha256(
+        json.dumps(ident, sort_keys=True).encode()).hexdigest()
+
+
+def _shard_name(start: int, end: int) -> str:
+    return f"shard_{start:08d}_{end:08d}.npz"
+
+
+def _scan_spans(results_dir: str) -> list[tuple[int, int]]:
+    """Committed shard spans, sorted by start (atomic rename => presence is
+    the commit marker)."""
+    spans = []
+    for name in os.listdir(results_dir):
+        if m := _SHARD_RE.match(name):
+            spans.append((int(m.group(1)), int(m.group(2))))
+    return sorted(spans)
+
+
+def _prefix_spans(spans: Sequence[tuple[int, int]]) -> list[tuple[int, int]]:
+    """The contiguous-from-zero prefix of a sorted span list.  Orphans past a
+    gap are unreachable by a resumed sweep's skip logic and are ignored (and
+    deterministically overwritten when the sweep gets there)."""
+    out, want = [], 0
+    for start, end in spans:
+        if start != want:
+            break
+        out.append((start, end))
+        want = end
+    return out
+
+
+class SweepResultWriter:
+    """Append-only shard writer for one fingerprinted grid.
+
+    Created by ``sweep.run_sweep_batched`` when ``SweepConfig.results_dir``
+    is set.  ``write_chunk`` commits one chunk of run-major rows; ``restore``
+    is the resume path (scatter the committed prefix back into the summary
+    buffers).  Opening a directory that holds a DIFFERENT grid (or the same
+    grid with a different chunk size / history mode) raises — pass
+    ``on_mismatch="reset"`` to wipe and restart it instead (the figure
+    pipeline namespaces directories by fingerprint, so it never needs to).
+    """
+
+    def __init__(self, results_dir: str, *, grid_fingerprint: str,
+                 grid_meta: list[dict], n_runs: int, gens: int,
+                 n_n: int, n_o: int, keep_history: str, chunk_size: int,
+                 on_mismatch: str = "error"):
+        self.results_dir = results_dir
+        keep_history = normalize_history_mode(keep_history)
+        dims = {"gens": gens, "n_metrics": M.N_METRICS,
+                "n_n": n_n, "n_o": n_o}
+        manifest = {
+            "schema_version": SCHEMA_VERSION,
+            "grid_fingerprint": grid_fingerprint,
+            "schema_fingerprint": schema_fingerprint(keep_history, dims),
+            "keep_history": keep_history,
+            "chunk_size": int(chunk_size),
+            "n_runs": int(n_runs),
+            "dims": dims,
+            "metric_names": list(M.METRIC_NAMES),
+            "grid": grid_meta,
+        }
+        os.makedirs(results_dir, exist_ok=True)
+        path = os.path.join(results_dir, MANIFEST)
+        if os.path.exists(path):
+            with open(path) as f:
+                have = json.load(f)
+            keys = ("grid_fingerprint", "schema_fingerprint", "chunk_size",
+                    "keep_history", "n_runs", "schema_version")
+            if any(have.get(k) != manifest[k] for k in keys):
+                if on_mismatch != "reset":
+                    diff = [k for k in keys if have.get(k) != manifest[k]]
+                    raise ValueError(
+                        f"results_dir {results_dir!r} holds a different "
+                        f"sweep (mismatched: {diff}); use a fresh directory "
+                        f"or on_mismatch='reset'")
+                for name in os.listdir(results_dir):
+                    p = os.path.join(results_dir, name)
+                    shutil.rmtree(p) if os.path.isdir(p) else os.remove(p)
+                atomic_write_json(path, manifest)
+        else:
+            atomic_write_json(path, manifest)
+        self.manifest = manifest
+        self._fields = shard_fields(keep_history)
+        self._dims = dims
+
+    def spans(self) -> list[tuple[int, int]]:
+        """All committed shard spans (execution order), sorted."""
+        return _scan_spans(self.results_dir)
+
+    def coverage(self) -> int:
+        """Number of runs in the contiguous committed prefix."""
+        prefix = _prefix_spans(self.spans())
+        return prefix[-1][1] if prefix else 0
+
+    def restore(self, bufs: dict[str, np.ndarray]) -> int:
+        """Scatter the committed prefix into grid-order buffers in place
+        (only keys present in ``bufs`` are touched) and return the number of
+        runs covered — the sweep's resume point."""
+        prefix = _prefix_spans(self.spans())
+        for start, end in prefix:
+            with np.load(self._path(start, end)) as z:
+                rows = z["grid_rows"]
+                for key in bufs:
+                    if key in z:
+                        bufs[key][rows] = z[key]
+        return prefix[-1][1] if prefix else 0
+
+    def write_chunk(self, span: tuple[int, int],
+                    rows: dict[str, np.ndarray]) -> str:
+        """Atomically commit one chunk's rows as a shard.
+
+        ``span`` is the [start, end) execution-order span from
+        ``sweep.plan_chunks``; ``rows`` must hold exactly the schema's fields
+        with ``end - start`` rows each, including ``grid_rows`` (the
+        grid-order index of each row — σ-grouped execution permutes the
+        grid, shards record the mapping).
+        """
+        start, end = span
+        n = end - start
+        if set(rows) != set(self._fields):
+            raise ValueError(f"shard fields {sorted(rows)} != schema "
+                             f"{sorted(self._fields)}")
+        out = {}
+        for key, (shape, dtype) in self._fields.items():
+            want = (n,) + tuple(self._dims[d] if isinstance(d, str) else d
+                                for d in shape)
+            arr = np.ascontiguousarray(rows[key], dtype=dtype)
+            if arr.shape != want:
+                raise ValueError(f"{key}: shape {arr.shape} != {want}")
+            out[key] = arr
+        path = self._path(start, end)
+        atomic_save_npz(path, out)
+        return path
+
+    def _path(self, start: int, end: int) -> str:
+        return os.path.join(self.results_dir, _shard_name(start, end))
+
+
+class SweepResultReader:
+    """Lazy view over a committed shard set.
+
+    Summary columns are materialized on demand in grid order (constraints
+    outer, seeds inner — a few floats per run, cheap at any grid size);
+    per-generation histories are only ever surfaced one shard at a time.
+    ``correlations()`` / ``fronts()`` are bit-identical to calling
+    ``pareto.metric_correlations`` / ``pareto.sweep_fronts`` on the in-RAM
+    ``SweepResult`` of the same grid.
+
+    Attributes:
+      manifest:     the writer's manifest dict (fingerprints, dims, grid).
+      n_runs:       grid size (completed or not).
+      gens:         generations per run (history row length).
+      keep_history: "none" | "summary" | "full" — "none" shards carry no
+                    history fields.
+      fingerprint:  the grid fingerprint (``sweep.grid_fingerprint``).
+    """
+
+    def __init__(self, results_dir: str):
+        self.results_dir = results_dir
+        path = os.path.join(results_dir, MANIFEST)
+        if not os.path.exists(path):
+            raise FileNotFoundError(f"no results manifest at {path!r}")
+        with open(path) as f:
+            self.manifest = json.load(f)
+        if self.manifest["schema_version"] != SCHEMA_VERSION:
+            raise ValueError(
+                f"shard schema v{self.manifest['schema_version']} != "
+                f"reader v{SCHEMA_VERSION}")
+        self.n_runs: int = self.manifest["n_runs"]
+        self.gens: int = self.manifest["dims"]["gens"]
+        self.keep_history: str = self.manifest["keep_history"]
+        self.fingerprint: str = self.manifest["grid_fingerprint"]
+        self.metric_names: list[str] = self.manifest["metric_names"]
+
+    # -- shard-level access -------------------------------------------------
+
+    def spans(self) -> list[tuple[int, int]]:
+        """Contiguous committed prefix of shard spans (execution order)."""
+        return _prefix_spans(_scan_spans(self.results_dir))
+
+    @property
+    def completed(self) -> int:
+        """Runs covered by the committed prefix."""
+        spans = self.spans()
+        return spans[-1][1] if spans else 0
+
+    def done_mask(self) -> np.ndarray:
+        """(n_runs,) bool, grid order — rows with committed results."""
+        mask = np.zeros(self.n_runs, dtype=bool)
+        for _, rows in self.iter_shards(fields=("grid_rows",)):
+            mask[rows["grid_rows"]] = True
+        return mask
+
+    def iter_shards(self, fields: Sequence[str] | None = None
+                    ) -> Iterator[tuple[tuple[int, int], dict]]:
+        """Yield ``(span, {field: (rows, ...) array})`` per committed shard,
+        loading only ``fields`` (default: every field in the shard) — the
+        constant-memory access path."""
+        for start, end in self.spans():
+            path = os.path.join(self.results_dir, _shard_name(start, end))
+            with np.load(path) as z:
+                keys = z.files if fields is None else fields
+                yield (start, end), {k: z[k] for k in keys}
+
+    def iter_history(self) -> Iterator[tuple[np.ndarray, dict]]:
+        """Yield ``(grid_rows, {hist_*: (rows, gens, ...)})`` per shard.
+
+        Raises if the shard set was written with ``keep_history="none"``.
+        Peak memory is one chunk of history, independent of grid size.
+        """
+        if self.keep_history == "none":
+            raise ValueError('shards written with keep_history="none" hold '
+                             'no per-generation histories')
+        fields = ("grid_rows",) + tuple(HISTORY_FIELDS)
+        for _, rows in self.iter_shards(fields=fields):
+            yield rows["grid_rows"], {k: rows[k] for k in HISTORY_FIELDS}
+
+    # -- grid-order summary -------------------------------------------------
+
+    def summary(self, fields: Sequence[str] | None = None
+                ) -> dict[str, np.ndarray]:
+        """Materialize summary columns in grid order.
+
+        Args:
+          fields: summary field names (default: all of ``SUMMARY_FIELDS``
+            except ``grid_rows``).  History fields are refused — use
+            ``iter_history``.
+        Returns:
+          {field: (n_runs, ...) array} plus ``"done_mask"``: (n_runs,) bool.
+          Rows not yet committed are zero.
+        """
+        if fields is None:
+            fields = [k for k in SUMMARY_FIELDS if k != "grid_rows"]
+        bad = set(fields) - set(SUMMARY_FIELDS)
+        if bad:
+            raise ValueError(f"not summary fields: {sorted(bad)} "
+                             f"(histories go through iter_history)")
+        dims = self.manifest["dims"]
+        out, mask = {}, np.zeros(self.n_runs, dtype=bool)
+        for key in fields:
+            shape, dtype = SUMMARY_FIELDS[key]
+            trail = tuple(dims[d] if isinstance(d, str) else d for d in shape)
+            out[key] = np.zeros((self.n_runs,) + trail, dtype=dtype)
+        for _, rows in self.iter_shards(fields=("grid_rows",) + tuple(fields)):
+            idx = rows["grid_rows"]
+            mask[idx] = True
+            for key in fields:
+                out[key][idx] = rows[key]
+        out["done_mask"] = mask
+        return out
+
+    def records(self) -> list:
+        """Rebuild grid-order ``search.CircuitRecord`` rows for every
+        committed run — the same list ``search.run_sweep`` returns."""
+        from repro.core.search import CircuitRecord
+        s = self.summary(["parent_nodes", "parent_outs", "metrics",
+                          "power_rel", "feasible", "error_mean", "error_std"])
+        grid = self.manifest["grid"]
+        recs = []
+        for i in np.flatnonzero(s["done_mask"]):
+            recs.append(CircuitRecord(
+                genome_nodes=s["parent_nodes"][i],
+                genome_outs=s["parent_outs"][i],
+                metrics=s["metrics"][i],
+                power_rel=float(s["power_rel"][i]),
+                constraint=grid[i]["constraint"],
+                seed=int(grid[i]["seed"]),
+                feasible=bool(s["feasible"][i]),
+                error_mean=float(s["error_mean"][i]),
+                error_std=float(s["error_std"][i]),
+            ))
+        return recs
+
+    # -- pareto feeds (mirror SweepResult's methods) ------------------------
+
+    def _masked(self, feasible_only: bool):
+        s = self.summary(["metrics", "power_rel", "feasible"])
+        mask = s["done_mask"] & (s["feasible"].astype(bool)
+                                 if feasible_only else True)
+        return s["metrics"][mask], s["power_rel"][mask]
+
+    def correlations(self, feasible_only: bool = True) -> np.ndarray:
+        """|Pearson| cross-metric correlations over committed runs (paper
+        Fig. 6) — bit-identical to ``SweepResult.correlations``."""
+        from repro.core.pareto import metric_correlations
+        metrics, _ = self._masked(feasible_only)
+        return metric_correlations(metrics)
+
+    def fronts(self, metric_indices: Sequence[int] = (M.MAE, M.ER),
+               feasible_only: bool = True) -> dict[int, np.ndarray]:
+        """Power-vs-metric Pareto fronts (paper Figs. 7-14 axes) —
+        bit-identical to ``SweepResult.fronts``."""
+        from repro.core.pareto import sweep_fronts
+        metrics, power = self._masked(feasible_only)
+        return sweep_fronts(power, metrics, metric_indices)

@@ -106,17 +106,32 @@ def run_sweep(cfg: SearchConfig, constraints: Sequence[ConstraintSpec],
     """Grid of constraint configs × seeds (paper Sec. IV methodology).
 
     Executed by the batched engine (``core.sweep``): the whole grid runs as
-    vmapped chunks of one jit'd program instead of a serial Python loop —
-    pass ``sweep=SweepConfig(...)`` to control chunking / checkpointing.
+    vmapped chunks of one jit'd program instead of a serial Python loop.
     With ``cfg.evolve.backend="pallas"`` each chunk generation evaluates its
     whole (chunk × λ) population in ONE fused kernel dispatch (the genome
     axis on the Pallas grid); results stay bit-identical to the serial loop.
-    Record order is unchanged (constraints outer, seeds inner).  Histories
-    are unreachable through this records-only API, so the default config
-    skips them; use ``run_sweep_batched`` directly to keep them.
+
+    Args:
+      cfg: the problem (operand ``width``, ``kind``, CGP geometry, evolve
+        budget).  ``cfg.evolve.seed`` is ignored — each run's PRNG stream is
+        ``PRNGKey(seed)``, so a run's result depends only on its own
+        ``(constraint, seed)`` pair, never on the rest of the grid (grids
+        sharing a config row share its result bit-for-bit).
+      constraints: grid rows, outer loop of the run order.
+      seeds: inner loop of the run order.
+      sweep: ``sweep.SweepConfig`` execution knobs — chunking, checkpoint
+        resume, ``keep_history`` mode and the streaming ``results_dir``
+        spill (``core.results``).  Default: ``keep_history="none"``, no
+        spill (per-generation histories are unreachable through this
+        records-only API; set a ``results_dir`` and read them back through
+        ``results.SweepResultReader``, or call ``run_sweep_batched``).
+
+    Returns:
+      ``CircuitRecord`` list in grid order (constraints outer, seeds inner),
+      one per completed run — identical to ``run_sweep_serial``.
     """
     from repro.core.sweep import SweepConfig, run_sweep_batched
-    sweep = sweep or SweepConfig(keep_history=False)
+    sweep = sweep or SweepConfig(keep_history="none")
     return run_sweep_batched(cfg, constraints, seeds, sweep).records
 
 

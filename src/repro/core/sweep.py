@@ -33,6 +33,13 @@ state (evolved parent/best genomes, fitness, final metrics and optional
 per-generation histories) is committed through ``repro.checkpoint.store``;
 a restarted sweep with the same grid fingerprint continues mid-grid from the
 last committed chunk.
+
+Results stream to disk instead of accumulating in host RAM when
+``SweepConfig.results_dir`` is set: every finished chunk is committed as one
+append-only shard through ``core.results.SweepResultWriter`` and the shard
+set is itself the resume state (see ``core.results`` for the schema).  The
+``keep_history`` mode picks what stays in RAM — at paper scale (27k runs)
+only ``"summary"``/``"none"`` keep the host footprint flat.
 """
 from __future__ import annotations
 
@@ -50,6 +57,8 @@ import numpy as np
 from repro.checkpoint import store
 from repro.core import metrics as M
 from repro.core import simulate
+from repro.core.results import (SweepResultReader, SweepResultWriter,
+                                normalize_history_mode)
 from repro.core.evolve import (EvolveConfig, init_state_batched,
                                make_batched_generation_step, scan_generations)
 from repro.core.fitness import ConstraintSpec, feasible
@@ -62,6 +71,28 @@ class SweepConfig:
     """Execution knobs of the batched sweep (grid semantics live in
     ``SearchConfig``/``ConstraintSpec``).
 
+    ``keep_history`` picks where per-generation parent histories live
+    (legacy bools are accepted: ``True`` -> ``"full"``, ``False`` ->
+    ``"none"``):
+
+      * ``"full"``    — histories kept in host RAM on the returned
+        ``SweepResult`` (``hist_*`` arrays, ``(n_runs, gens, ...)``) and,
+        when ``results_dir`` is set, spilled to shards too.  RAM grows with
+        grid size — fine for small grids, not for the paper's 27k runs.
+      * ``"summary"`` — histories are spilled to ``results_dir`` shards but
+        NEVER held in RAM (``SweepResult.hist_*`` are None); read them back
+        one chunk at a time via ``SweepResultReader.iter_history``.  Peak
+        host memory is one chunk of history — independent of grid size.
+        Without a ``results_dir`` the histories are dropped.
+      * ``"none"``    — no histories anywhere (smallest shards/checkpoints).
+
+    ``results_dir`` enables the streaming results layer (``core.results``):
+    every finished chunk commits one append-only shard, and the shard set is
+    the resume state — a restarted sweep with the same grid fingerprint
+    continues after the last committed shard (``checkpoint_dir`` is then
+    redundant for resume; shards commit every chunk, checkpoints every
+    ``checkpoint_every`` chunks).
+
     ``checkpoint_dir`` is best given one directory per grid: resume matches
     checkpoints by grid fingerprint so foreign checkpoints are never loaded,
     but step numbers are run counts, and two grids sharing a directory can
@@ -71,7 +102,8 @@ class SweepConfig:
     chunk_size: int = 32          # runs per jit'd batch (device-memory bound)
     checkpoint_dir: str | None = None
     checkpoint_every: int = 1     # chunks between checkpoint commits
-    keep_history: bool = True     # per-generation parent histories
+    keep_history: str | bool = "full"  # "none" | "summary" | "full"
+    results_dir: str | None = None     # streaming shard spill (core.results)
     max_chunks: int | None = None  # stop after N chunks (tests/ops drains)
 
     def __post_init__(self):
@@ -80,6 +112,8 @@ class SweepConfig:
         if self.checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {self.checkpoint_every}")
+        object.__setattr__(self, "keep_history",
+                           normalize_history_mode(self.keep_history))
 
 
 @dataclasses.dataclass
@@ -91,6 +125,10 @@ class SweepResult:
     on an interrupted sweep (``max_chunks``) the completed rows need not be a
     prefix — ``done_mask`` marks them; ``records`` holds exactly the
     completed runs, in grid order.
+
+    ``hist_*`` arrays are populated only with ``keep_history="full"``; in
+    ``"summary"`` mode the histories live in the ``results_dir`` shards
+    (``reader().iter_history()``), in ``"none"`` mode nowhere.
     """
     records: list                      # list[CircuitRecord], len == completed
     thresholds: np.ndarray             # (n_runs, N_METRICS)
@@ -106,6 +144,14 @@ class SweepResult:
     n_runs: int
     runs_per_sec: float                # throughput of this call (0 if resumed
                                        # with nothing left to do)
+    results_dir: str | None = None     # shard spill location, if streaming
+
+    def reader(self) -> SweepResultReader:
+        """Open the shard set this sweep streamed to (requires a
+        ``SweepConfig.results_dir``)."""
+        if self.results_dir is None:
+            raise ValueError("sweep ran without results_dir — no shards")
+        return SweepResultReader(self.results_dir)
 
     def correlations(self, feasible_only: bool = True) -> np.ndarray:
         """|Pearson| cross-metric correlation over completed runs."""
@@ -193,9 +239,15 @@ def plan_chunks(sigmas: np.ndarray, chunk_size: int) -> list[tuple[int, int]]:
     return spans
 
 
-def grid_fingerprint(cfg, grid, keep_history: bool) -> str:
-    """Identity of (problem, grid) — guards checkpoint resume."""
+def grid_fingerprint(cfg, grid, keep_history: str | bool) -> str:
+    """Identity of (problem, grid, history mode) — guards checkpoint resume
+    AND the results-shard manifest (``core.results``).  The history mode is
+    part of the identity because it changes the buffer/shard schema."""
     ecfg = cfg.evolve
+    # the legacy bool spellings hash as bools so checkpoints written before
+    # the mode strings existed still resume ("summary" is new, no legacy)
+    keep_history = {"full": True, "none": False}.get(
+        normalize_history_mode(keep_history), "summary")
     ident = {
         "width": cfg.width, "kind": cfg.kind, "n_n": cfg.n_n,
         "generations": ecfg.generations, "lam": ecfg.lam,
@@ -213,7 +265,9 @@ def grid_fingerprint(cfg, grid, keep_history: bool) -> str:
 
 
 def _alloc_buffers(spec: CGPSpec, n_runs: int, gens: int,
-                   keep_history: bool) -> dict[str, np.ndarray]:
+                   keep_history: str) -> dict[str, np.ndarray]:
+    """Grid-order host buffers; ``hist_*`` only in "full" mode (the other
+    modes keep host RAM independent of the history volume)."""
     bufs = {
         "parent_nodes": np.zeros((n_runs, spec.n_n, 3), np.int32),
         "parent_outs": np.zeros((n_runs, spec.n_o), np.int32),
@@ -226,7 +280,7 @@ def _alloc_buffers(spec: CGPSpec, n_runs: int, gens: int,
         "error_mean": np.zeros((n_runs,), np.float32),
         "error_std": np.zeros((n_runs,), np.float32),
     }
-    if keep_history:
+    if keep_history == "full":
         bufs["hist_power_rel"] = np.zeros((n_runs, gens), np.float32)
         bufs["hist_fit"] = np.zeros((n_runs, gens), np.float32)
         bufs["hist_metrics"] = np.zeros((n_runs, gens, M.N_METRICS),
@@ -261,10 +315,14 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
 
     ``cfg`` is a ``search.SearchConfig``; per-run results match the serial
     ``run_search`` path (same PRNG streams, same evaluation semantics).
+    With ``sweep.results_dir`` every finished chunk streams to an on-disk
+    shard (``core.results``) and the shard set is the resume state;
+    otherwise resume goes through ``sweep.checkpoint_dir`` as before.
     """
     from repro.core.search import CircuitRecord, problem_arrays
 
     sweep = sweep or SweepConfig()
+    mode = sweep.keep_history  # normalized by SweepConfig.__post_init__
     grid = sweep_grid(constraints, seeds)
     n_runs = len(grid)
     gens = cfg.evolve.generations
@@ -281,10 +339,24 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
     # (deterministic from the fingerprinted grid, so resume stays valid).
     perm = np.argsort(sigmas, kind="stable")
 
-    bufs = _alloc_buffers(spec, n_runs, gens, sweep.keep_history)
-    fingerprint = grid_fingerprint(cfg, grid, sweep.keep_history)
-    done = (_try_resume(sweep.checkpoint_dir, bufs, fingerprint)
-            if sweep.checkpoint_dir else 0)
+    bufs = _alloc_buffers(spec, n_runs, gens, mode)
+    fingerprint = grid_fingerprint(cfg, grid, mode)
+    writer = None
+    if sweep.results_dir:
+        writer = SweepResultWriter(
+            sweep.results_dir, grid_fingerprint=fingerprint,
+            grid_meta=[{"constraint": con.describe(), "seed": seed,
+                        "gauss_sigma": con.gauss_sigma}
+                       for con, seed in grid],
+            n_runs=n_runs, gens=gens, n_n=spec.n_n, n_o=spec.n_o,
+            keep_history=mode, chunk_size=sweep.chunk_size)
+        # shards commit every chunk (checkpoints only every
+        # checkpoint_every), so they are the freshest resume state
+        done = writer.restore(bufs)
+    elif sweep.checkpoint_dir:
+        done = _try_resume(sweep.checkpoint_dir, bufs, fingerprint)
+    else:
+        done = 0
 
     chunks = plan_chunks(sigmas[perm], sweep.chunk_size)
     t0 = time.perf_counter()
@@ -308,20 +380,34 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             spec, sigma, state.parent.nodes, state.parent.outs,
             jnp.asarray(thr[sel]), in_planes, gvals, gpower)
 
-        bufs["parent_nodes"][orig] = np.asarray(state.parent.nodes)[:n]
-        bufs["parent_outs"][orig] = np.asarray(state.parent.outs)[:n]
-        bufs["best_nodes"][orig] = np.asarray(state.best.nodes)[:n]
-        bufs["best_outs"][orig] = np.asarray(state.best.outs)[:n]
-        bufs["best_fit"][orig] = np.asarray(state.best_fit)[:n]
-        bufs["metrics"][orig] = np.asarray(met)[:n]
-        bufs["power_rel"][orig] = np.asarray(prel)[:n]
-        bufs["feasible"][orig] = np.asarray(feas)[:n].astype(np.uint8)
-        bufs["error_mean"][orig] = np.asarray(emean)[:n]
-        bufs["error_std"][orig] = np.asarray(estd)[:n]
-        if sweep.keep_history:
+        chunk_rows = {
+            "parent_nodes": np.asarray(state.parent.nodes)[:n],
+            "parent_outs": np.asarray(state.parent.outs)[:n],
+            "best_nodes": np.asarray(state.best.nodes)[:n],
+            "best_outs": np.asarray(state.best.outs)[:n],
+            "best_fit": np.asarray(state.best_fit)[:n],
+            "metrics": np.asarray(met)[:n],
+            "power_rel": np.asarray(prel)[:n],
+            "feasible": np.asarray(feas)[:n].astype(np.uint8),
+            "error_mean": np.asarray(emean)[:n],
+            "error_std": np.asarray(estd)[:n],
+        }
+        for key, rows in chunk_rows.items():
+            bufs[key][orig] = rows
+        if mode == "full":
             bufs["hist_power_rel"][orig] = np.asarray(hp)[:n]
             bufs["hist_fit"][orig] = np.asarray(hf)[:n]
             bufs["hist_metrics"][orig] = np.asarray(hm)[:n]
+        if writer is not None:
+            chunk_rows["grid_rows"] = orig.astype(np.int32)
+            chunk_rows["thresholds"] = thr[orig]
+            if mode != "none":
+                # histories spill per chunk and (in "summary" mode) never
+                # touch a grid-sized host buffer
+                chunk_rows["hist_power_rel"] = np.asarray(hp)[:n]
+                chunk_rows["hist_fit"] = np.asarray(hf)[:n]
+                chunk_rows["hist_metrics"] = np.asarray(hm)[:n]
+            writer.write_chunk((start, end), chunk_rows)
 
         done = max(done, end)
         ran += n
@@ -364,4 +450,5 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         completed=done,
         n_runs=n_runs,
         runs_per_sec=(ran / dt) if ran else 0.0,
+        results_dir=sweep.results_dir,
     )

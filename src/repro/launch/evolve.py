@@ -56,8 +56,18 @@ def main():
     ap.add_argument("--checkpoint-dir", default=None,
                     help="resumable sweep state; rerun with the same grid "
                          "to continue mid-grid")
+    ap.add_argument("--results-dir", default=None,
+                    help="stream each finished chunk to an on-disk result "
+                         "shard (core.results); the shard set is resumable "
+                         "and is read back with SweepResultReader")
+    ap.add_argument("--history", default=None,
+                    choices=["full", "summary", "none"],
+                    help="per-generation history mode: 'full' keeps them in "
+                         "RAM, 'summary' spills them to --results-dir only "
+                         "(flat host memory), 'none' drops them "
+                         "(default: full)")
     ap.add_argument("--no-history", action="store_true",
-                    help="drop per-generation histories (smaller checkpoints)")
+                    help="alias for --history none (kept for compatibility)")
     ap.add_argument("--serial", action="store_true",
                     help="reference serial loop instead of the batched engine")
     args = ap.parse_args()
@@ -70,14 +80,22 @@ def main():
     if args.serial:
         records = run_sweep_serial(cfg, constraints, seeds=range(args.seeds))
     else:
+        mode = args.history or ("none" if args.no_history else "full")
         sweep = SweepConfig(chunk_size=args.chunk_size,
                             checkpoint_dir=args.checkpoint_dir,
-                            keep_history=not args.no_history)
+                            results_dir=args.results_dir,
+                            keep_history=mode)
         result = run_sweep_batched(cfg, constraints, seeds=range(args.seeds),
                                    sweep=sweep)
         records = result.records
         print(f"[evolve] {result.completed}/{result.n_runs} runs "
               f"@ {result.runs_per_sec:.2f} runs/s", flush=True)
+        if args.results_dir:
+            reader = result.reader()
+            print(f"[evolve] {len(reader.spans())} result shards "
+                  f"({reader.completed}/{reader.n_runs} runs, history mode "
+                  f"{reader.keep_history!r}) -> {args.results_dir}",
+                  flush=True)
     for r in records:
         met = {n: round(float(v), 4) for n, v in
                zip(("mae", "wce", "er", "mre", "avg", "acc0", "gauss"),

@@ -1,0 +1,167 @@
+"""Streaming results layer: spill/read-back round trips vs the in-RAM path.
+
+The shard reader must be BIT-identical to the in-RAM ``SweepResult`` on the
+same grid (``metric_correlations``/``sweep_fronts``/records), in every
+history mode; an interrupted sweep must replay into a consistent shard set
+(each grid row exactly once); and foreign/incompatible shard directories
+must be refused, mirroring the checkpoint fingerprint guards.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec
+from repro.core.results import (SweepResultReader, SweepResultWriter,
+                                normalize_history_mode)
+from repro.core.search import SearchConfig
+from repro.core.sweep import SweepConfig, run_sweep_batched
+
+CFG = SearchConfig(width=2, kind="add", n_n=40,
+                   evolve=EvolveConfig(generations=50, lam=3))
+CONSTRAINTS = [ConstraintSpec(mae=1.0), ConstraintSpec(mae=2.0),
+               ConstraintSpec(er=50.0)]
+SEEDS = (0, 1)
+N_RUNS = len(CONSTRAINTS) * len(SEEDS)
+
+
+@pytest.fixture(scope="module")
+def in_ram():
+    """The in-RAM oracle: full histories, no spill."""
+    return run_sweep_batched(CFG, CONSTRAINTS, SEEDS,
+                             SweepConfig(chunk_size=4, keep_history="full"))
+
+
+def _spill(tmp_path, mode, chunk_size=4, **kw):
+    sweep = SweepConfig(chunk_size=chunk_size, keep_history=mode,
+                        results_dir=str(tmp_path), **kw)
+    return run_sweep_batched(CFG, CONSTRAINTS, SEEDS, sweep)
+
+
+def _assert_reader_matches(reader, in_ram):
+    s = reader.summary()
+    assert s["done_mask"].all() and reader.completed == N_RUNS
+    np.testing.assert_array_equal(s["metrics"], in_ram.metrics)
+    np.testing.assert_array_equal(s["power_rel"], in_ram.power_rel)
+    np.testing.assert_array_equal(s["feasible"].astype(bool),
+                                  in_ram.feasible)
+    np.testing.assert_array_equal(s["best_fit"], in_ram.best_fit)
+    np.testing.assert_array_equal(s["thresholds"], in_ram.thresholds)
+    # the paper's analyses, bit-for-bit (ISSUE 3 acceptance)
+    np.testing.assert_array_equal(reader.correlations(),
+                                  in_ram.correlations())
+    want, got = in_ram.fronts((M.MAE, M.ER)), reader.fronts((M.MAE, M.ER))
+    assert want.keys() == got.keys()
+    for k in want:
+        np.testing.assert_array_equal(want[k], got[k])
+
+
+@pytest.mark.parametrize("mode", ["none", "summary", "full"])
+def test_spill_round_trip_matches_in_ram(tmp_path, in_ram, mode):
+    res = _spill(tmp_path, mode)
+    _assert_reader_matches(res.reader(), in_ram)
+    # history placement follows the mode
+    if mode == "full":
+        np.testing.assert_array_equal(res.hist_fit, in_ram.hist_fit)
+    else:
+        assert res.hist_fit is None and res.hist_metrics is None
+    reader = res.reader()
+    assert reader.keep_history == mode
+    if mode == "none":
+        with pytest.raises(ValueError, match="no per-generation"):
+            next(reader.iter_history())
+    else:
+        hist = np.zeros_like(in_ram.hist_fit)
+        seen = 0
+        for rows, h in reader.iter_history():
+            hist[rows] = h["hist_fit"]
+            seen += len(rows)
+            assert h["hist_metrics"].shape[1:] == (50, M.N_METRICS)
+        assert seen == N_RUNS
+        np.testing.assert_array_equal(hist, in_ram.hist_fit)
+
+
+def test_reader_records_match_in_ram(tmp_path, in_ram):
+    recs = _spill(tmp_path, "summary").reader().records()
+    assert len(recs) == len(in_ram.records)
+    for a, b in zip(recs, in_ram.records):
+        assert (a.constraint, a.seed, a.feasible) == \
+            (b.constraint, b.seed, b.feasible)
+        np.testing.assert_array_equal(a.metrics, b.metrics)
+        np.testing.assert_array_equal(a.genome_nodes, b.genome_nodes)
+        np.testing.assert_array_equal(a.genome_outs, b.genome_outs)
+        assert a.power_rel == b.power_rel
+
+
+def test_interrupted_sweep_replays_into_consistent_shards(tmp_path, in_ram):
+    """Mid-grid interruption + resume: no duplicated or dropped runs, and
+    the resumed shard set reproduces the uninterrupted results exactly."""
+    partial = _spill(tmp_path, "full", max_chunks=1)
+    assert partial.completed == 4
+    assert partial.reader().completed == 4
+    resumed = _spill(tmp_path, "full")
+    reader = resumed.reader()
+    rows = np.concatenate([s["grid_rows"] for _, s
+                           in reader.iter_shards(fields=("grid_rows",))])
+    assert sorted(rows.tolist()) == list(range(N_RUNS))  # exactly once each
+    _assert_reader_matches(reader, in_ram)
+    # full-mode resume restores histories from the shard set, not recompute
+    np.testing.assert_array_equal(resumed.hist_fit, in_ram.hist_fit)
+    # a third run finds nothing to do
+    again = _spill(tmp_path, "full")
+    assert again.runs_per_sec == 0.0 and again.completed == N_RUNS
+    np.testing.assert_array_equal(again.metrics, in_ram.metrics)
+
+
+def test_results_dir_resume_with_checkpoints_too(tmp_path, in_ram):
+    """checkpoint_dir and results_dir together: shards drive the resume,
+    checkpoints keep committing."""
+    ck = str(tmp_path / "ck")
+    rd = tmp_path / "shards"
+    partial = _spill(rd, "summary", checkpoint_dir=ck, max_chunks=1)
+    assert partial.completed == 4 and os.path.isdir(ck)
+    resumed = _spill(rd, "summary", checkpoint_dir=ck)
+    _assert_reader_matches(resumed.reader(), in_ram)
+
+
+def test_foreign_grid_and_chunk_size_refused(tmp_path):
+    _spill(tmp_path, "summary", max_chunks=1)
+    with pytest.raises(ValueError, match="different sweep"):
+        run_sweep_batched(CFG, CONSTRAINTS[:2], SEEDS,
+                          SweepConfig(chunk_size=4, keep_history="summary",
+                                      results_dir=str(tmp_path)))
+    with pytest.raises(ValueError, match="different sweep"):
+        _spill(tmp_path, "summary", chunk_size=3)
+    with pytest.raises(ValueError, match="different sweep"):
+        _spill(tmp_path, "full")  # history mode changes the shard schema
+
+
+def test_writer_reset_wipes_foreign_shards(tmp_path):
+    _spill(tmp_path, "summary", max_chunks=1)
+    writer = SweepResultWriter(
+        str(tmp_path), grid_fingerprint="other", grid_meta=[], n_runs=2,
+        gens=8, n_n=10, n_o=4, keep_history="none", chunk_size=2,
+        on_mismatch="reset")
+    assert writer.spans() == [] and writer.coverage() == 0
+
+
+def test_history_mode_normalization():
+    assert normalize_history_mode(True) == "full"
+    assert normalize_history_mode(False) == "none"
+    assert SweepConfig(keep_history=True).keep_history == "full"
+    assert SweepConfig(keep_history=False).keep_history == "none"
+    assert SweepConfig(keep_history="summary").keep_history == "summary"
+    with pytest.raises(ValueError, match="keep_history"):
+        SweepConfig(keep_history="everything")
+
+
+def test_reader_requires_manifest(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        SweepResultReader(str(tmp_path))
+    res = run_sweep_batched(CFG, CONSTRAINTS[:1], (0,),
+                            SweepConfig(chunk_size=1, keep_history="none"))
+    with pytest.raises(ValueError, match="results_dir"):
+        res.reader()

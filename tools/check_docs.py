@@ -1,0 +1,166 @@
+#!/usr/bin/env python
+"""Docs/link check (the CI `docs` leg; `make docs-check`).
+
+Verifies the documentation surface stays truthful:
+
+  1. every relative markdown link in README/DESIGN/ROADMAP/CHANGES points at
+     an existing file (and an existing heading, for #anchors);
+  2. every ``DESIGN.md §N[.M]`` reference in the source tree resolves to a
+     section marker actually present in DESIGN.md;
+  3. every documented command is runnable at ``--help`` level: the ROADMAP
+     tier-1 command plus each backticked ``python ...`` command found in
+     ROADMAP.md (module/script resolved, args replaced by ``--help``), plus
+     the explicit entry-point list below.
+
+Exit code 0 == all good; failures are listed one per line.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md", "PAPER.md"]
+SOURCE_DIRS = ["src", "benchmarks", "examples", "tests", "tools"]
+
+# argparse-bearing entry points that must answer --help (quickstart.py is
+# deliberately absent: it has no CLI and would run the full search)
+ENTRY_POINTS = [
+    [sys.executable, "-m", "repro.launch.evolve", "--help"],
+    [sys.executable, "-m", "benchmarks.run", "--help"],
+    [sys.executable, "benchmarks/kernel_micro.py", "--help"],
+    [sys.executable, "examples/pareto_sweep.py", "--help"],
+    [sys.executable, "-m", "pytest", "--help"],
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SECREF = re.compile(r"DESIGN\.md\s*§(\d+(?:\.\d+)?)")
+_CMD = re.compile(r"`((?:[A-Z_][A-Z0-9_]*=\S*\s+)*(?:PYTHONPATH=\S+\s+)?"
+                  r"python[^`]*)`")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\s-]", "", s)
+    return re.sub(r"\s+", "-", s)
+
+
+def check_links() -> list[str]:
+    errors = []
+    headings = {}
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            text = f.read()
+        headings[doc] = {_slug(m.group(1)) for m in
+                         re.finditer(r"^#+\s+(.+)$", text, re.M)}
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            text = f.read()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            fname, _, anchor = target.partition("#")
+            if fname and not os.path.exists(os.path.join(ROOT, fname)):
+                errors.append(f"{doc}: broken link -> {target}")
+                continue
+            if anchor:
+                owner = fname or doc
+                known = headings.get(owner)
+                if known is not None and anchor not in known:
+                    errors.append(f"{doc}: broken anchor -> {target}")
+    return errors
+
+
+def check_design_sections() -> list[str]:
+    path = os.path.join(ROOT, "DESIGN.md")
+    if not os.path.exists(path):
+        return ["DESIGN.md missing"]
+    with open(path) as f:
+        design = f.read()
+    errors = []
+    for base in SOURCE_DIRS + ["."]:
+        root = os.path.join(ROOT, base)
+        for dirpath, _, files in os.walk(root):
+            if base == "." and dirpath != root:
+                continue  # top level: only the .md files themselves
+            for name in files:
+                if not name.endswith((".py", ".md")):
+                    continue
+                fpath = os.path.join(dirpath, name)
+                with open(fpath, errors="replace") as f:
+                    text = f.read()
+                for m in _SECREF.finditer(text):
+                    if f"§{m.group(1)}" not in design:
+                        rel = os.path.relpath(fpath, ROOT)
+                        errors.append(f"{rel}: dangling DESIGN.md "
+                                      f"§{m.group(1)} reference")
+    return sorted(set(errors))
+
+
+def _help_variant(cmd: str) -> list[str] | None:
+    """Rewrite a documented command into its --help invocation: keep the
+    interpreter and the module/script target, drop everything else."""
+    try:
+        tokens = shlex.split(cmd.replace("\\\n", " "))
+    except ValueError:
+        return None
+    tokens = [t for t in tokens if "=" not in t or not
+              re.match(r"^[A-Z_][A-Z0-9_]*=", t)]  # strip env assignments
+    if not tokens or not tokens[0].startswith("python"):
+        return None
+    out = [sys.executable]
+    rest = tokens[1:]
+    if rest[:1] == ["-m"] and len(rest) > 1:
+        out += ["-m", rest[1]]
+    else:
+        script = next((t for t in rest if t.endswith(".py")), None)
+        if script is None:
+            return None
+        out.append(script)
+    return out + ["--help"]
+
+
+def check_commands() -> list[str]:
+    cmds = {tuple(c) for c in ENTRY_POINTS}
+    with open(os.path.join(ROOT, "ROADMAP.md")) as f:
+        roadmap = f.read()
+    for m in _CMD.finditer(roadmap):
+        variant = _help_variant(m.group(1))
+        if variant:
+            cmds.add(tuple(variant))
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH",
+                                                              ""))
+    errors = []
+    for cmd in sorted(cmds):
+        proc = subprocess.run(list(cmd), cwd=ROOT, env=env,
+                              capture_output=True, timeout=300)
+        if proc.returncode != 0:
+            tail = proc.stderr.decode(errors="replace").strip()[-200:]
+            errors.append(f"--help failed ({proc.returncode}): "
+                          f"{' '.join(cmd[1:])}: {tail}")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_design_sections() + check_commands()
+    for e in errors:
+        print(f"FAIL {e}")
+    if not errors:
+        print("docs check OK (links, DESIGN sections, --help commands)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
