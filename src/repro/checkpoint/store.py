@@ -17,6 +17,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import tempfile
 import threading
 from typing import Any
 
@@ -30,11 +31,28 @@ _MARKER = "_COMPLETE"
 def atomic_write_json(path: str, obj: Any) -> None:
     """Write JSON through a temp file + rename so readers never observe a
     partially-written file (shared by the checkpoint manifests and the
-    streaming results layer in ``core.results``)."""
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(obj, f, indent=1, default=float)
-    os.replace(tmp, path)
+    streaming results layer in ``core.results``).
+
+    The temp name is unique per writer (mkstemp), not a fixed ``path.tmp``:
+    multiple pods of a sharded sweep may race to create the same manifest
+    with identical bytes, and a shared temp path would let one writer
+    truncate the file under another mid-write — last rename wins instead.
+    """
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=os.path.basename(path) + ".tmp.")
+    try:
+        # mkstemp creates 0600; restore the umask-derived mode plain open()
+        # would give, so shared-results manifests stay readable cross-user
+        umask = os.umask(0)
+        os.umask(umask)
+        os.fchmod(fd, 0o666 & ~umask)
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=1, default=float)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
 def atomic_save_npz(path: str, arrays: dict[str, np.ndarray]) -> None:

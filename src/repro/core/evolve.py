@@ -139,15 +139,14 @@ def _eval_pop_pallas(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
 
     The stacked genome axis lands on Pallas grid dimension 0 instead of a
     vmap batching dimension (``kernels.ops.cgp_eval_batched``).  Input-space
-    sharding (``axis_name``) needs per-genome psum'd partials and keeps the
-    per-genome kernel under vmap.
+    sharding (``axis_name``) stays fused: each shard dispatches the same
+    grid on its cube slice and the per-genome accumulators psum/pmax across
+    the axis inside the kernel wrapper (the cube-shard variant, DESIGN.md
+    §6) — the partials and popcounts coming back are already cube-global.
     """
-    if axis_name is not None:
-        return jax.vmap(lambda g: _eval_pallas(g, spec, in_planes,
-                                               golden_vals, gauss_sigma,
-                                               axis_name))(genomes)
     partials, pops = kops.cgp_eval_batched(genomes, spec, in_planes,
-                                           golden_vals, gauss_sigma)
+                                           golden_vals, gauss_sigma,
+                                           axis_name=axis_name)
     n_total = partials.count.astype(jnp.float32)            # (R,)
     probs = pops / n_total[:, None]
     metric_vec = jax.vmap(
@@ -245,7 +244,8 @@ def init_state(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
 
 
 def make_batched_generation_step(spec: CGPSpec, cfg: EvolveConfig,
-                                 golden_power: jax.Array):
+                                 golden_power: jax.Array,
+                                 axis_name: str | None = None):
     """Run-batched one-generation function for the batched sweep engine.
 
     ``state`` leaves and ``thr_mat`` carry a leading run axis C.  Mutation
@@ -256,6 +256,13 @@ def make_batched_generation_step(spec: CGPSpec, cfg: EvolveConfig,
     R = C·λ genomes on the grid, instead of a vmap-of-vmap-of-pallas_call.
     Same positional signature as ``make_generation_step``'s result, so it
     drops into ``scan_generations`` directly.
+
+    ``axis_name`` enables input-space sharding of the fused dispatch
+    (DESIGN.md §6): ``in_planes``/``golden_vals`` are this shard's cube
+    slice and the evaluation partials combine across the axis, so the whole
+    (C × λ) population still evaluates as one (sharded) dispatch per
+    generation.  Mutation/selection run on per-run state that shard_map
+    replicates, so the step must execute under a context binding the axis.
     """
     eval_pop = get_population_eval(cfg.backend)
 
@@ -270,7 +277,7 @@ def make_batched_generation_step(spec: CGPSpec, cfg: EvolveConfig,
         flat = jax.tree.map(
             lambda x: x.reshape((C * cfg.lam,) + x.shape[2:]), offspring)
         res = eval_pop(flat, spec, in_planes, golden_vals, cfg.gauss_sigma,
-                       None)
+                       axis_name)
         res = jax.tree.map(
             lambda x: x.reshape((C, cfg.lam) + x.shape[1:]), res)
         fits = jax.vmap(lambda p, m, t: jax.vmap(fitness_fn)(
@@ -284,12 +291,15 @@ def make_batched_generation_step(spec: CGPSpec, cfg: EvolveConfig,
 
 def init_state_batched(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                        thr_mat: jax.Array, in_planes: jax.Array,
-                       golden_vals: jax.Array, keys: jax.Array) -> EvolveState:
+                       golden_vals: jax.Array, keys: jax.Array,
+                       axis_name: str | None = None) -> EvolveState:
     """Per-run init for the batched sweep: the golden parent is evaluated
     ONCE (it is identical for every run) and broadcast over the run axis;
-    only fitness differs per run (per-run thresholds)."""
+    only fitness differs per run (per-run thresholds).  ``axis_name`` shards
+    the golden evaluation over the cube like the generation step's."""
     eval_fn = get_eval_fn(cfg.backend)
-    res = eval_fn(golden, spec, in_planes, golden_vals, cfg.gauss_sigma, None)
+    res = eval_fn(golden, spec, in_planes, golden_vals, cfg.gauss_sigma,
+                  axis_name)
     C = thr_mat.shape[0]
     fit = jax.vmap(
         lambda t: fitness_fn(res.cost.power, res.metric_vec, t))(thr_mat)
@@ -341,15 +351,39 @@ def evolve_sharded(mesh, spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                    thresholds_per_pod: jax.Array, golden_power: jax.Array,
                    *, data_axis: str = "data", model_axis: str = "model",
                    pod_axis: str | None = None):
-    """Build the shard_map'd multi-island evolve function.
+    """Build the shard_map'd multi-island evolve function (DESIGN.md §2.2).
 
-    Layout:
-      thresholds_per_pod : (n_pod_cfgs, N_METRICS) sharded over ``pod`` (or
-                           (1, N_METRICS) replicated when single-pod)
-      keys               : (n_islands,) folded per island, sharded over ``data``
-      in_planes/golden   : input cube sharded over ``model`` (words axis)
+    This is the ISLAND formulation of the distributed search: one (1+λ) run
+    per ``data``-axis slice with periodic best-parent migration
+    (``_migrate``), each run's candidate evaluation input-space-sharded over
+    ``model`` (metric partials / popcounts psum across it, see
+    ``metrics.combine_partials``), and — when ``pod_axis`` is given — one
+    constraint configuration per pod slice.  For the paper's constraint×seed
+    GRID at production scale, use the pod-sharded batched sweep instead
+    (``core.sweep.run_sweep_batched`` with ``SweepConfig.n_pods``, DESIGN.md
+    §6): there the pod axis partitions whole chunks of independent runs and
+    needs no cross-pod collectives at all.
 
-    Returns fn(keys, in_planes, golden_vals) -> stacked per-island results.
+    Args:
+      mesh: the active device mesh; must carry ``data_axis`` and
+        ``model_axis`` (and ``pod_axis`` when given).  The production shapes
+        are built by ``launch.mesh``.
+      spec/cfg/golden/golden_power: the problem, as in ``evolve`` —
+        ``cfg.migrate_every`` sets the island migration period.
+      thresholds_per_pod: ``(n_pod_cfgs, N_METRICS)`` threshold matrix,
+        sharded over ``pod_axis`` so each pod slice evolves under its own
+        combined-constraint vector — or ``(1, N_METRICS)`` replicated when
+        ``pod_axis`` is None (every island shares one constraint).
+      data_axis / model_axis / pod_axis: physical mesh-axis names (the
+        logical mapping lives in ``parallel.ctx.LOGICAL``).
+
+    Returns:
+      fn(thresholds, keys, in_planes, golden_vals) — shard_map'd over
+      ``mesh``; ``keys`` is ``(n_islands,)`` PRNG keys sharded over
+      ``data_axis`` (see ``make_island_keys``), ``in_planes``/``golden_vals``
+      the input cube sharded over ``model_axis`` on the word/value axis.
+      Returns per-island stacked (parent, best, best_fit, hist_power_rel,
+      hist_metrics, hist_fit), gathered over ``data_axis``.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map

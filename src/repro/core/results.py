@@ -30,10 +30,21 @@ order — resuming with a different chunk size would produce overlapping
 spans, so the writer refuses it.
 
 The shard set doubles as the sweep's resume state: ``restore`` scatters the
-contiguous committed prefix back into the driver's summary buffers, so a
-``results_dir`` sweep resumes mid-grid even without a ``checkpoint_dir``
-(and, because shards commit every chunk while checkpoints commit every
-``checkpoint_every`` chunks, shards are never staler than the checkpoint).
+committed spans back into the driver's summary buffers, so a ``results_dir``
+sweep resumes mid-grid even without a ``checkpoint_dir`` (and, because shards
+commit every chunk while checkpoints commit every ``checkpoint_every``
+chunks, shards are never staler than the checkpoint).
+
+Multi-pod execution (DESIGN.md §6): the manifest additionally pins ``n_pods``
+and the full deterministic ``chunk_spans`` plan, and the chunk plan is
+round-robin partitioned across pods (``pod_partition``).  Each pod commits
+only its own spans, so a partially-run multi-pod directory holds a UNION of
+per-pod prefixes — committed coverage is computed per pod
+(``pod_prefix_spans``) instead of as one global contiguous prefix, and
+single-pod directories are the ``n_pods=1`` special case of the same rule.
+Pods share nothing at runtime beyond this one-time manifest: span names,
+shard bytes and the manifest content are all deterministic functions of the
+fingerprinted grid, so concurrent creation by several pods is idempotent.
 """
 from __future__ import annotations
 
@@ -135,8 +146,10 @@ def _scan_spans(results_dir: str) -> list[tuple[int, int]]:
 
 def _prefix_spans(spans: Sequence[tuple[int, int]]) -> list[tuple[int, int]]:
     """The contiguous-from-zero prefix of a sorted span list.  Orphans past a
-    gap are unreachable by a resumed sweep's skip logic and are ignored (and
-    deterministically overwritten when the sweep gets there)."""
+    gap are unreachable by a resumed single-pod sweep's skip logic and are
+    ignored (and deterministically overwritten when the sweep gets there).
+    Fallback coverage rule for directories whose manifest predates the
+    ``chunk_spans`` plan; plan-pinned directories use ``pod_prefix_spans``."""
     out, want = [], 0
     for start, end in spans:
         if start != want:
@@ -146,22 +159,65 @@ def _prefix_spans(spans: Sequence[tuple[int, int]]) -> list[tuple[int, int]]:
     return out
 
 
+def pod_partition(chunk_spans: Sequence[tuple[int, int]],
+                  n_pods: int) -> list[list[tuple[int, int]]]:
+    """Round-robin assignment of execution-order chunk spans to pods.
+
+    Pod ``p`` owns ``chunk_spans[p::n_pods]`` — deterministic from the plan
+    alone (no coordination), and interleaved so σ-grouped plans spread each
+    σ's chunks across pods instead of handing one pod a whole σ block.
+    """
+    if n_pods < 1:
+        raise ValueError(f"n_pods must be >= 1, got {n_pods}")
+    return [list(chunk_spans[p::n_pods]) for p in range(n_pods)]
+
+
+def pod_prefix_spans(committed: Sequence[tuple[int, int]],
+                     chunk_spans: Sequence[tuple[int, int]],
+                     n_pods: int) -> list[tuple[int, int]]:
+    """Committed coverage of a pod-partitioned plan: the union over pods of
+    each pod's contiguous committed prefix OF ITS OWN span sequence, sorted.
+
+    This is the multi-pod generalization of ``_prefix_spans`` (to which it
+    reduces for ``n_pods=1``): pods commit independently, so the directory
+    may cover e.g. pod 1's first three chunks while pod 0 has one — a state
+    with global gaps that is still an exact per-pod resume point.  Spans past
+    a gap in a pod's OWN sequence are orphans (ignored; deterministically
+    overwritten with identical bytes when that pod gets there), exactly like
+    the single-pod rule.
+    """
+    have = set(map(tuple, committed))
+    out: list[tuple[int, int]] = []
+    for pod_seq in pod_partition([tuple(s) for s in chunk_spans], n_pods):
+        for span in pod_seq:
+            if span not in have:
+                break
+            out.append(span)
+    return sorted(out)
+
+
 class SweepResultWriter:
     """Append-only shard writer for one fingerprinted grid.
 
     Created by ``sweep.run_sweep_batched`` when ``SweepConfig.results_dir``
     is set.  ``write_chunk`` commits one chunk of run-major rows; ``restore``
-    is the resume path (scatter the committed prefix back into the summary
+    is the resume path (scatter the committed coverage back into the summary
     buffers).  Opening a directory that holds a DIFFERENT grid (or the same
-    grid with a different chunk size / history mode) raises — pass
-    ``on_mismatch="reset"`` to wipe and restart it instead (the figure
+    grid with a different chunk size / history mode / pod count) raises —
+    pass ``on_mismatch="reset"`` to wipe and restart it instead (the figure
     pipeline namespaces directories by fingerprint, so it never needs to).
+
+    Multi-pod sweeps hand every pod's writer the same ``chunk_spans`` plan
+    and ``n_pods``; ``pod_spans`` is the per-pod span filter (which chunks
+    this pod owns) and committed coverage is the union of per-pod prefixes
+    (``pod_prefix_spans``) rather than one global prefix.
     """
 
     def __init__(self, results_dir: str, *, grid_fingerprint: str,
                  grid_meta: list[dict], n_runs: int, gens: int,
                  n_n: int, n_o: int, keep_history: str, chunk_size: int,
-                 on_mismatch: str = "error"):
+                 chunk_spans: Sequence[tuple[int, int]] | None = None,
+                 n_pods: int = 1, on_mismatch: str = "error"):
         self.results_dir = results_dir
         keep_history = normalize_history_mode(keep_history)
         dims = {"gens": gens, "n_metrics": M.N_METRICS,
@@ -172,6 +228,9 @@ class SweepResultWriter:
             "schema_fingerprint": schema_fingerprint(keep_history, dims),
             "keep_history": keep_history,
             "chunk_size": int(chunk_size),
+            "n_pods": int(n_pods),
+            "chunk_spans": ([[int(s), int(e)] for s, e in chunk_spans]
+                            if chunk_spans is not None else None),
             "n_runs": int(n_runs),
             "dims": dims,
             "metric_names": list(M.METRIC_NAMES),
@@ -183,10 +242,13 @@ class SweepResultWriter:
             with open(path) as f:
                 have = json.load(f)
             keys = ("grid_fingerprint", "schema_fingerprint", "chunk_size",
-                    "keep_history", "n_runs", "schema_version")
-            if any(have.get(k) != manifest[k] for k in keys):
+                    "keep_history", "n_runs", "schema_version", "n_pods")
+            # pre-pod manifests carry no pod fields; they are single-pod
+            defaults = {"n_pods": 1}
+            diff = [k for k in keys
+                    if have.get(k, defaults.get(k)) != manifest[k]]
+            if diff:
                 if on_mismatch != "reset":
-                    diff = [k for k in keys if have.get(k) != manifest[k]]
                     raise ValueError(
                         f"results_dir {results_dir!r} holds a different "
                         f"sweep (mismatched: {diff}); use a fresh directory "
@@ -194,6 +256,14 @@ class SweepResultWriter:
                 for name in os.listdir(results_dir):
                     p = os.path.join(results_dir, name)
                     shutil.rmtree(p) if os.path.isdir(p) else os.remove(p)
+                atomic_write_json(path, manifest)
+            elif manifest["chunk_spans"] is None and have.get("chunk_spans"):
+                # reopened without a plan: keep the pinned one (the plan is
+                # a deterministic function of the matched fingerprint +
+                # chunk_size, so it cannot disagree with this sweep)
+                manifest["chunk_spans"] = have["chunk_spans"]
+            elif any(k not in have for k in ("n_pods", "chunk_spans")):
+                # matching pre-pod directory: one-time idempotent upgrade
                 atomic_write_json(path, manifest)
         else:
             atomic_write_json(path, manifest)
@@ -205,23 +275,44 @@ class SweepResultWriter:
         """All committed shard spans (execution order), sorted."""
         return _scan_spans(self.results_dir)
 
-    def coverage(self) -> int:
-        """Number of runs in the contiguous committed prefix."""
-        prefix = _prefix_spans(self.spans())
-        return prefix[-1][1] if prefix else 0
+    def pod_spans(self, pod_index: int) -> list[tuple[int, int]]:
+        """The span filter of one pod: the ordered slice of the chunk plan
+        that pod ``pod_index`` owns (requires a ``chunk_spans`` plan)."""
+        plan = self.manifest.get("chunk_spans")
+        if plan is None:
+            raise ValueError("writer opened without a chunk_spans plan")
+        parts = pod_partition([tuple(s) for s in plan],
+                              self.manifest["n_pods"])
+        return parts[pod_index]
 
-    def restore(self, bufs: dict[str, np.ndarray]) -> int:
-        """Scatter the committed prefix into grid-order buffers in place
-        (only keys present in ``bufs`` are touched) and return the number of
-        runs covered — the sweep's resume point."""
-        prefix = _prefix_spans(self.spans())
-        for start, end in prefix:
+    def live_spans(self) -> list[tuple[int, int]]:
+        """Committed coverage: the union of per-pod committed prefixes of the
+        manifest's chunk plan (global contiguous prefix when no plan is
+        pinned — pre-pod directories)."""
+        committed = self.spans()
+        plan = self.manifest.get("chunk_spans")
+        if plan is None:
+            return _prefix_spans(committed)
+        return pod_prefix_spans(committed, [tuple(s) for s in plan],
+                                self.manifest["n_pods"])
+
+    def coverage(self) -> int:
+        """Number of runs covered by the committed per-pod prefixes."""
+        return sum(end - start for start, end in self.live_spans())
+
+    def restore(self, bufs: dict[str, np.ndarray]) -> list[tuple[int, int]]:
+        """Scatter the committed coverage into grid-order buffers in place
+        (only keys present in ``bufs`` are touched) and return the covered
+        spans — the sweep's resume point (each pod skips its own committed
+        prefix; other pods' spans pre-fill the result buffers)."""
+        live = self.live_spans()
+        for start, end in live:
             with np.load(self._path(start, end)) as z:
                 rows = z["grid_rows"]
                 for key in bufs:
                     if key in z:
                         bufs[key][rows] = z[key]
-        return prefix[-1][1] if prefix else 0
+        return live
 
     def write_chunk(self, span: tuple[int, int],
                     rows: dict[str, np.ndarray]) -> str:
@@ -289,18 +380,28 @@ class SweepResultReader:
         self.keep_history: str = self.manifest["keep_history"]
         self.fingerprint: str = self.manifest["grid_fingerprint"]
         self.metric_names: list[str] = self.manifest["metric_names"]
+        # pre-pod manifests pin neither a pod count nor the chunk plan
+        self.n_pods: int = self.manifest.get("n_pods", 1)
 
     # -- shard-level access -------------------------------------------------
 
     def spans(self) -> list[tuple[int, int]]:
-        """Contiguous committed prefix of shard spans (execution order)."""
-        return _prefix_spans(_scan_spans(self.results_dir))
+        """Committed shard spans, execution order: the union of per-pod
+        committed prefixes of the manifest's chunk plan — a mid-sweep
+        multi-pod directory legitimately has global gaps (DESIGN.md §6).
+        Falls back to the global contiguous prefix for pre-pod manifests
+        without a pinned plan."""
+        committed = _scan_spans(self.results_dir)
+        plan = self.manifest.get("chunk_spans")
+        if plan is None:
+            return _prefix_spans(committed)
+        return pod_prefix_spans(committed, [tuple(s) for s in plan],
+                                self.n_pods)
 
     @property
     def completed(self) -> int:
-        """Runs covered by the committed prefix."""
-        spans = self.spans()
-        return spans[-1][1] if spans else 0
+        """Runs covered by the committed per-pod prefixes."""
+        return sum(end - start for start, end in self.spans())
 
     def done_mask(self) -> np.ndarray:
         """(n_runs,) bool, grid order — rows with committed results."""

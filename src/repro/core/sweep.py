@@ -40,6 +40,21 @@ append-only shard through ``core.results.SweepResultWriter`` and the shard
 set is itself the resume state (see ``core.results`` for the schema).  The
 ``keep_history`` mode picks what stays in RAM — at paper scale (27k runs)
 only ``"summary"``/``"none"`` keep the host footprint flat.
+
+Multi-host execution shards the grid over the ``pod`` mesh axis
+(DESIGN.md §6): with ``SweepConfig.n_pods > 1`` the deterministic chunk plan
+is round-robin partitioned across pods (``results.pod_partition``) and THIS
+process executes only pod ``pod_index``'s slice — each pod dispatches its own
+(chunk × λ) fused program and commits its own shards into the shared
+``results_dir``, whose one-time manifest is the only cross-pod coordination.
+Resume is per pod (each pod skips the committed prefix of its OWN span
+sequence), and because every chunk's bytes are a deterministic function of
+the fingerprinted grid, a pod-sharded sweep produces bit-identical shards to
+the single-host run of the same grid.  ``SweepConfig.model_axis``
+additionally shards each dispatch's input cube over that mesh axis
+(``shard_map`` around ``evolve_chunk``; evaluation partials psum through the
+cube-shard kernel variant), fusing pods × chunk × λ × cube-shards into one
+dispatch per generation per pod.
 """
 from __future__ import annotations
 
@@ -98,6 +113,23 @@ class SweepConfig:
     but step numbers are run counts, and two grids sharing a directory can
     overwrite each other's equal-numbered steps (older ones are also pruned,
     keep=3, after each commit).
+
+    ``n_pods``/``pod_index`` pod-shard the grid (DESIGN.md §6): the chunk
+    plan is round-robin partitioned over ``n_pods`` and this process runs
+    only pod ``pod_index``'s slice (every pod of a multi-host launch runs
+    the same command with its own index; ``pod_index=None`` resolves it from
+    the active mesh / process index via ``parallel.ctx.default_pod_index``).
+    Multi-pod sweeps REQUIRE a shared ``results_dir`` (the shard set is the
+    only resume state whose coverage tolerates per-pod prefixes) and refuse
+    ``checkpoint_dir`` (checkpoints assume one global prefix).
+
+    ``model_axis`` names a mesh axis of the ACTIVE ``parallel.ctx`` mesh to
+    input-space-shard every dispatch over: ``evolve_chunk`` runs under
+    ``shard_map`` with the cube's word axis split across it and evaluation
+    partials psum'd (the cube-shard kernel variant), per-run state
+    replicated.  Selection under MAE/WCE/ER/AVG/ACC0 constraints stays
+    bit-identical to the unsharded dispatch (integer-exact partials); MRE
+    sums are reassociated, so MRE-constrained runs are only allclose.
     """
     chunk_size: int = 32          # runs per jit'd batch (device-memory bound)
     checkpoint_dir: str | None = None
@@ -105,6 +137,9 @@ class SweepConfig:
     keep_history: str | bool = "full"  # "none" | "summary" | "full"
     results_dir: str | None = None     # streaming shard spill (core.results)
     max_chunks: int | None = None  # stop after N chunks (tests/ops drains)
+    n_pods: int = 1               # pod-shard the chunk plan (DESIGN.md §6)
+    pod_index: int | None = None  # this process's pod (None: resolve via ctx)
+    model_axis: str | None = None  # mesh axis to shard the input cube over
 
     def __post_init__(self):
         if self.chunk_size < 1:
@@ -112,6 +147,22 @@ class SweepConfig:
         if self.checkpoint_every < 1:
             raise ValueError(
                 f"checkpoint_every must be >= 1, got {self.checkpoint_every}")
+        if self.n_pods < 1:
+            raise ValueError(f"n_pods must be >= 1, got {self.n_pods}")
+        if self.pod_index is not None and not (
+                0 <= self.pod_index < self.n_pods):
+            raise ValueError(f"pod_index {self.pod_index} outside "
+                             f"[0, {self.n_pods})")
+        if self.n_pods > 1:
+            if self.results_dir is None:
+                raise ValueError(
+                    "multi-pod sweeps need a shared results_dir: the shard "
+                    "set is the only resume state that tolerates per-pod "
+                    "prefixes (DESIGN.md §6)")
+            if self.checkpoint_dir is not None:
+                raise ValueError(
+                    "checkpoint_dir assumes a single global progress prefix; "
+                    "multi-pod sweeps resume through the results_dir shards")
         object.__setattr__(self, "keep_history",
                            normalize_history_mode(self.keep_history))
 
@@ -172,11 +223,11 @@ class SweepResult:
 # Batched core (one chunk = one XLA program)
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("spec", "cfg"))
+@functools.partial(jax.jit, static_argnames=("spec", "cfg", "axis_name"))
 def evolve_chunk(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                  thr_mat: jax.Array, in_planes: jax.Array,
                  golden_vals: jax.Array, golden_power: jax.Array,
-                 keys: jax.Array):
+                 keys: jax.Array, axis_name: str | None = None):
     """Evolve ``thr_mat.shape[0]`` runs in one program.
 
     The serial ``evolve`` semantics are preserved per run (same per-run PRNG
@@ -185,14 +236,52 @@ def evolve_chunk(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
     the whole (chunk × λ) offspring population in one shot per generation —
     for ``backend="pallas"`` that is a single fused kernel dispatch with the
     genome axis on the Pallas grid.  Histories are returned run-major.
+
+    ``axis_name`` input-space-shards that dispatch (DESIGN.md §6): call
+    under ``shard_map`` with ``in_planes``/``golden_vals`` split on their
+    word/value axis and everything else replicated — evaluation partials
+    combine across the axis, so every shard holds the replicated global
+    result (``_sharded_chunk_fn`` builds exactly that wrapper).
     """
-    batched_step = make_batched_generation_step(spec, cfg, golden_power)
+    batched_step = make_batched_generation_step(spec, cfg, golden_power,
+                                                axis_name=axis_name)
     state0 = init_state_batched(spec, cfg, golden, thr_mat, in_planes,
-                                golden_vals, keys)
+                                golden_vals, keys, axis_name=axis_name)
     state, (hp, hm, hf) = scan_generations(batched_step, state0, thr_mat,
                                            in_planes, golden_vals,
                                            golden_power, cfg.generations)
     return state, hp.T, jnp.swapaxes(hm, 0, 1), hf.T
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_chunk_fn(mesh, model_axis: str, spec: CGPSpec,
+                      cfg: EvolveConfig):
+    """jit(shard_map(evolve_chunk)) with the input cube sharded over
+    ``model_axis`` — the pods × chunk × λ × cube-shards fusion of DESIGN.md
+    §6.  Cached per (mesh, axis, problem): the returned callable reuses one
+    trace per σ group exactly like the unsharded ``evolve_chunk``.
+
+    Per-run state/thresholds/keys are replicated (mutation and selection are
+    identical on every shard because the combined evaluation partials are);
+    outputs are therefore replicated too, which is what ``out_specs=P()``
+    with ``check_rep=False`` asserts (psum through the Pallas wrapper is
+    opaque to shard_map's replication checker).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def call(gold_nodes, gold_outs, thr_mat, in_planes, golden_vals,
+             golden_power, keys):
+        return evolve_chunk(spec, cfg, Genome(gold_nodes, gold_outs),
+                            thr_mat, in_planes, golden_vals, golden_power,
+                            keys, axis_name=model_axis)
+
+    rep = P()
+    fn = shard_map(call, mesh=mesh,
+                   in_specs=(rep, rep, rep, P(None, model_axis),
+                             P(model_axis), rep, rep),
+                   out_specs=rep, check_rep=False)
+    return jax.jit(fn)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "gauss_sigma"))
@@ -318,6 +407,13 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
     With ``sweep.results_dir`` every finished chunk streams to an on-disk
     shard (``core.results``) and the shard set is the resume state;
     otherwise resume goes through ``sweep.checkpoint_dir`` as before.
+
+    With ``sweep.n_pods > 1`` this call executes ONE pod's slice of the
+    chunk plan (DESIGN.md §6) — run it once per pod (one process per host
+    on a multi-host mesh, each with its own ``pod_index``) against the
+    shared ``results_dir``; the returned ``SweepResult`` covers everything
+    committed so far (this pod's work plus other pods' restored shards),
+    with ``done_mask`` marking the covered grid rows.
     """
     from repro.core.search import CircuitRecord, problem_arrays
 
@@ -335,13 +431,33 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
     # Execution order groups runs by gauss_sigma (stable, so grid order is
     # kept within a group): sigma-interleaved grids would otherwise shatter
     # into tiny chunks that padding blows back up to chunk_size.  Results are
-    # scattered back to grid order; ``done`` counts a prefix of THIS order
-    # (deterministic from the fingerprinted grid, so resume stays valid).
+    # scattered back to grid order; coverage is tracked per execution-order
+    # chunk span (deterministic from the fingerprinted grid, so resume stays
+    # valid and — multi-pod — tolerates other pods' gaps).
     perm = np.argsort(sigmas, kind="stable")
+    chunks = plan_chunks(sigmas[perm], sweep.chunk_size)
+
+    pod = sweep.pod_index
+    if pod is None:
+        if sweep.n_pods > 1:
+            from repro.parallel import ctx
+            pod = ctx.default_pod_index(sweep.n_pods)
+        else:
+            pod = 0
+
+    if sweep.model_axis is not None:
+        from repro.parallel import ctx
+        mesh = ctx.get_mesh()
+        if mesh is None or sweep.model_axis not in mesh.axis_names:
+            raise ValueError(
+                f"model_axis {sweep.model_axis!r} needs an active "
+                f"parallel.ctx mesh carrying that axis (have: "
+                f"{None if mesh is None else mesh.axis_names})")
 
     bufs = _alloc_buffers(spec, n_runs, gens, mode)
     fingerprint = grid_fingerprint(cfg, grid, mode)
     writer = None
+    exec_done = np.zeros(n_runs, bool)  # execution-order positions covered
     if sweep.results_dir:
         writer = SweepResultWriter(
             sweep.results_dir, grid_fingerprint=fingerprint,
@@ -349,20 +465,24 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
                         "gauss_sigma": con.gauss_sigma}
                        for con, seed in grid],
             n_runs=n_runs, gens=gens, n_n=spec.n_n, n_o=spec.n_o,
-            keep_history=mode, chunk_size=sweep.chunk_size)
+            keep_history=mode, chunk_size=sweep.chunk_size,
+            chunk_spans=chunks, n_pods=sweep.n_pods)
         # shards commit every chunk (checkpoints only every
         # checkpoint_every), so they are the freshest resume state
-        done = writer.restore(bufs)
+        for s, e in writer.restore(bufs):
+            exec_done[s:e] = True
     elif sweep.checkpoint_dir:
-        done = _try_resume(sweep.checkpoint_dir, bufs, fingerprint)
-    else:
-        done = 0
+        exec_done[:_try_resume(sweep.checkpoint_dir, bufs, fingerprint)] = \
+            True
 
-    chunks = plan_chunks(sigmas[perm], sweep.chunk_size)
+    # multi-pod always has a writer (SweepConfig enforces results_dir), so
+    # the manifest-pinned plan is the single source of the pod partition
+    my_chunks = chunks if sweep.n_pods == 1 else writer.pod_spans(pod)
+
     t0 = time.perf_counter()
     ran = chunks_run = 0
-    for start, end in chunks:
-        if end <= done:
+    for start, end in my_chunks:
+        if exec_done[start:end].all():
             continue  # committed by a previous (interrupted) sweep
         if sweep.max_chunks is not None and chunks_run >= sweep.max_chunks:
             break
@@ -373,9 +493,16 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         sigma = float(sigmas[orig[0]])
         ecfg = dataclasses.replace(cfg.evolve, gauss_sigma=sigma, seed=0)
 
-        state, hp, hm, hf = evolve_chunk(
-            spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
-            gpower, jnp.asarray(keys[sel]))
+        if sweep.model_axis is not None:
+            evolve_call = _sharded_chunk_fn(ctx.get_mesh(), sweep.model_axis,
+                                            spec, ecfg)
+            state, hp, hm, hf = evolve_call(
+                gold.nodes, gold.outs, jnp.asarray(thr[sel]), in_planes,
+                gvals, gpower, jnp.asarray(keys[sel]))
+        else:
+            state, hp, hm, hf = evolve_chunk(
+                spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
+                gpower, jnp.asarray(keys[sel]))
         met, prel, feas, emean, estd = characterize_chunk(
             spec, sigma, state.parent.nodes, state.parent.outs,
             jnp.asarray(thr[sel]), in_planes, gvals, gpower)
@@ -409,18 +536,22 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
                 chunk_rows["hist_metrics"] = np.asarray(hm)[:n]
             writer.write_chunk((start, end), chunk_rows)
 
-        done = max(done, end)
+        exec_done[start:end] = True
         ran += n
         chunks_run += 1
         if sweep.checkpoint_dir and (chunks_run % sweep.checkpoint_every == 0
-                                     or done == n_runs):
+                                     or exec_done.all()):
+            # single-pod only (multi-pod refuses checkpoint_dir): coverage
+            # is a plain prefix, whose length is the checkpoint step
+            done = int(np.argmin(exec_done)) if not exec_done.all() \
+                else n_runs
             store.save_checkpoint(sweep.checkpoint_dir, done, bufs,
                                   {"done": done, "fingerprint": fingerprint})
             store.cleanup(sweep.checkpoint_dir, keep=3)
     dt = time.perf_counter() - t0
 
     done_mask = np.zeros(n_runs, bool)
-    done_mask[perm[:done]] = True
+    done_mask[perm[exec_done]] = True
     records = []
     for i in np.flatnonzero(done_mask):
         con, seed = grid[i]
@@ -447,7 +578,7 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         hist_fit=bufs.get("hist_fit"),
         hist_metrics=bufs.get("hist_metrics"),
         done_mask=done_mask,
-        completed=done,
+        completed=int(exec_done.sum()),
         n_runs=n_runs,
         runs_per_sec=(ran / dt) if ran else 0.0,
         results_dir=sweep.results_dir,

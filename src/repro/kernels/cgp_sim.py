@@ -23,7 +23,10 @@ the input-plane/golden index maps ignore ``r`` so the pipeliner skips the
 re-fetch whenever a block's index is unchanged between consecutive steps
 (always true for the common sub-word-cube test widths, where W == bw).
 Cross-genome cube-block reuse at paper scale would need the transposed grid
-plus accumulators in flushed VMEM scratch — ROADMAP, mesh-sharding item.
+plus accumulators in flushed VMEM scratch — ROADMAP, transposed-grid item.
+Input-space sharding composes with the fused grid through
+``cgp_sim_metrics_batched_sharded`` (per-genome accumulators psum/pmax
+across the mesh axis — DESIGN.md §6).
 
 All output refs are ≥2D ``(1, cols)`` blocks of ``(R, cols)`` arrays and the
 golden values are blocked as ``(1, bw*32)`` rows (lane-dim multiple of 128 for
@@ -228,6 +231,46 @@ def cgp_sim_metrics_batched(nodes: jax.Array, outs: jax.Array,
     if r_pad:
         sums, wce, hist, pops = sums[:R], wce[:R], hist[:R], pops[:R]
     return sums, wce, hist, pops
+
+
+def cgp_sim_metrics_batched_sharded(nodes: jax.Array, outs: jax.Array,
+                                    in_planes: jax.Array,
+                                    golden_vals: jax.Array, *,
+                                    axis_name: str, n_i: int, n_n: int,
+                                    n_o: int, gauss_sigma: float = 256.0,
+                                    n_gauss_side: int = 4,
+                                    block_words: int = 512, r_tile: int = 8,
+                                    interpret: bool = True):
+    """Cube-shard variant of the fused batched kernel (DESIGN.md §6).
+
+    Runs under input-space sharding (``shard_map`` with the cube's word axis
+    split over ``axis_name``, conventionally the ``model`` mesh axis): every
+    shard dispatches the SAME (runs × λ) Pallas grid on its local
+    ``in_planes``/``golden_vals`` slice, then the per-genome accumulators
+    combine across the axis — sums/histogram/popcounts (and the count row
+    inside ``sums``) psum, the worst-case-error row pmax.  The psum contract
+    stays exact for the integer-valued accumulators: every per-shard split
+    sum is an integer < 2^24, so float32 psum is associative on them and the
+    combined partials are bit-identical to the unsharded kernel's
+    (``rel_sum`` alone is genuinely floating-point and only
+    reassociation-close).
+
+    This is what lets a pod's whole (chunk × λ) population fuse into one
+    dispatch per generation even when the cube is sharded —
+    ``evolve._eval_pop_pallas`` previously had to fall back to a vmap of
+    per-genome kernels whenever ``axis_name`` was set.
+
+    Same signature/returns as ``cgp_sim_metrics_batched`` plus ``axis_name``;
+    ``in_planes`` is ``(n_i, W_local)`` and ``golden_vals`` ``(W_local*32,)``
+    — this shard's word slice.  Must be called inside a context where
+    ``axis_name`` is bound (it is not independently jit-able).
+    """
+    sums, wce, hist, pops = cgp_sim_metrics_batched(
+        nodes, outs, in_planes, golden_vals, n_i=n_i, n_n=n_n, n_o=n_o,
+        gauss_sigma=gauss_sigma, n_gauss_side=n_gauss_side,
+        block_words=block_words, r_tile=r_tile, interpret=interpret)
+    return (jax.lax.psum(sums, axis_name), jax.lax.pmax(wce, axis_name),
+            jax.lax.psum(hist, axis_name), jax.lax.psum(pops, axis_name))
 
 
 @functools.partial(

@@ -83,7 +83,7 @@ def cgp_eval(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
 def cgp_eval_batched(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
                      golden_vals: jax.Array, gauss_sigma: float = 256.0,
                      block_words: int = 512, interpret: bool | None = None,
-                     r_tile: int | None = None
+                     r_tile: int | None = None, axis_name: str | None = None
                      ) -> tuple[M.MetricPartials, jax.Array]:
     """Fused (runs × λ) population evaluation in ONE kernel dispatch.
 
@@ -93,6 +93,14 @@ def cgp_eval_batched(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
     kernel per genome (or one vmap-batched program) and left the run axis
     off the grid.  Returns (MetricPartials with leading R, pops (R, n_n)).
 
+    With ``axis_name`` the input cube is sharded over that mesh axis:
+    ``in_planes``/``golden_vals`` are this shard's word slice, the local
+    dispatch is unchanged, and the per-genome accumulators are combined
+    across the axis before decoding (``cgp_sim_metrics_batched_sharded`` —
+    psum for the sums/histogram/popcount rows, pmax for WCE), so the
+    returned partials and popcounts are already cube-global.  Only callable
+    where the axis is bound (e.g. under ``shard_map``).
+
     ``r_tile=None`` picks the genome-axis pad automatically: sublane padding
     only helps the Mosaic lowering, while interpret mode pays every pad row
     as a full recomputed evaluation — so 8 when compiled, 1 interpreted.
@@ -101,11 +109,16 @@ def cgp_eval_batched(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
         interpret = default_interpret()
     if r_tile is None:
         r_tile = 1 if interpret else 8
-    sums, wce, hist, pops = _cgp.cgp_sim_metrics_batched(
-        genomes.nodes, genomes.outs, in_planes, golden_vals,
-        n_i=spec.n_i, n_n=spec.n_n, n_o=spec.n_o,
-        gauss_sigma=gauss_sigma, block_words=block_words,
-        r_tile=r_tile, interpret=interpret)
+    kw = dict(n_i=spec.n_i, n_n=spec.n_n, n_o=spec.n_o,
+              gauss_sigma=gauss_sigma, block_words=block_words,
+              r_tile=r_tile, interpret=interpret)
+    if axis_name is None:
+        sums, wce, hist, pops = _cgp.cgp_sim_metrics_batched(
+            genomes.nodes, genomes.outs, in_planes, golden_vals, **kw)
+    else:
+        sums, wce, hist, pops = _cgp.cgp_sim_metrics_batched_sharded(
+            genomes.nodes, genomes.outs, in_planes, golden_vals,
+            axis_name=axis_name, **kw)
     return _partials_from_sums(sums, wce, hist), pops
 
 

@@ -4,9 +4,17 @@
       --constraint "mae=0.5,er=60" --generations 2000 --seeds 3 \
       --out experiments/lib/mae05_er60.json
 
-Distributed mode (--mesh single/multi) runs the island model across the
-production mesh: islands over the data axis, the 2^16 input cube over the
-model axis, constraint configurations over pods (DESIGN.md §2).
+Multi-host / pod-sharded mode (DESIGN.md §6): launch the SAME command once
+per pod with a shared --results-dir and the pod count —
+
+  PYTHONPATH=src python -m repro.launch.evolve --width 8 \
+      --constraint "mae=0.5,er=60" --seeds 30 --pods 4 \
+      --results-dir /shared/sweep-shards --history summary
+
+Each process executes its own disjoint slice of the chunk plan (pod index
+auto-resolved from the mesh/process, or forced with --pod-index) and commits
+its shards independently; results are bit-identical to the single-host run
+and any pod can be re-launched to resume its slice.
 """
 from __future__ import annotations
 
@@ -68,9 +76,23 @@ def main():
                          "(default: full)")
     ap.add_argument("--no-history", action="store_true",
                     help="alias for --history none (kept for compatibility)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="pod-shard the sweep: partition the chunk plan "
+                         "over N pods and run only this process's slice "
+                         "(launch once per pod with a shared --results-dir; "
+                         "DESIGN.md section 6)")
+    ap.add_argument("--pod-index", type=int, default=None,
+                    help="which pod slice this process executes (default: "
+                         "resolved from the active mesh / JAX process index)")
     ap.add_argument("--serial", action="store_true",
                     help="reference serial loop instead of the batched engine")
     args = ap.parse_args()
+    if args.pods > 1 and not args.results_dir:
+        ap.error("--pods > 1 needs a shared --results-dir (the shard set "
+                 "is the only cross-pod resume state)")
+    if args.serial and args.pods > 1:
+        ap.error("--serial is the single-process reference loop; it cannot "
+                 "pod-shard the grid (drop --serial or --pods)")
 
     cfg = SearchConfig(
         width=args.width, kind=args.kind, n_n=args.nodes,
@@ -81,14 +103,22 @@ def main():
         records = run_sweep_serial(cfg, constraints, seeds=range(args.seeds))
     else:
         mode = args.history or ("none" if args.no_history else "full")
+        pod = args.pod_index
+        if args.pods > 1 and pod is None:
+            # resolve ONCE here so the printed label and the executed slice
+            # cannot disagree
+            from repro.parallel import ctx
+            pod = ctx.default_pod_index(args.pods)
         sweep = SweepConfig(chunk_size=args.chunk_size,
                             checkpoint_dir=args.checkpoint_dir,
                             results_dir=args.results_dir,
-                            keep_history=mode)
+                            keep_history=mode,
+                            n_pods=args.pods, pod_index=pod)
         result = run_sweep_batched(cfg, constraints, seeds=range(args.seeds),
                                    sweep=sweep)
         records = result.records
-        print(f"[evolve] {result.completed}/{result.n_runs} runs "
+        tag = f"pod {pod}/{args.pods}: " if args.pods > 1 else ""
+        print(f"[evolve] {tag}{result.completed}/{result.n_runs} runs "
               f"@ {result.runs_per_sec:.2f} runs/s", flush=True)
         if args.results_dir:
             reader = result.reader()

@@ -1,9 +1,25 @@
 """Parallel context: the active mesh + logical-axis resolution.
 
 Model code never names physical mesh axes; it requests logical axes
-("fsdp", "tp", "dp", "sp") which resolve against the active mesh set by the
-launcher.  With no active mesh every helper is a no-op, so the same model
-code runs single-device (smoke tests) and on the production mesh (dry-run).
+("fsdp", "tp", "dp", "sp", "sweep") which resolve against the active mesh
+set by the launcher.  With no active mesh every helper is a no-op, so the
+same model code runs single-device (smoke tests) and on the production mesh
+(dry-run).
+
+The physical axes are the production mesh's (pod, data, model)
+(``launch.mesh``, DESIGN.md §5).  The ``pod`` axis is deliberately
+DOUBLE-MAPPED, because the two cell types use it differently:
+
+  * LM cells fold it into data parallelism — "dp"/"fsdp"/"sp" resolve to
+    ``(pod, data)`` so batch/optimizer sharding spans pods transparently;
+  * CGP cells treat it as the constraint-grid partition — "sweep" resolves
+    to ``(pod,)``, and the pod-sharded sweep engine (``core.sweep``,
+    DESIGN.md §6) uses ``pod_count``/``default_pod_index`` below to decide
+    which slice of the chunk plan this process owns.  That partition needs
+    no collectives: pods only share the results manifest on disk.
+
+"tp" (tensor parallelism) and the CGP input-cube sharding both resolve to
+``model``.
 """
 from __future__ import annotations
 
@@ -15,12 +31,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _ACTIVE_MESH: Mesh | None = None
 
-# logical -> physical axis mapping (pod axis folds into data-parallel/FSDP)
+# logical -> physical axis mapping (see module docstring for why "pod"
+# appears both folded into dp/fsdp/sp and alone under "sweep")
 LOGICAL = {
     "dp": ("pod", "data"),
     "fsdp": ("pod", "data"),
     "sp": ("pod", "data"),   # sequence sharding reuses the data axis
     "tp": ("model",),
+    "sweep": ("pod",),       # constraint-grid pod partition (CGP cells)
 }
 
 
@@ -89,6 +107,8 @@ def shard(x: jax.Array, *logical_spec) -> jax.Array:
 
 
 def axis_size(logical: str) -> int:
+    """Total device count along a logical axis (1 with no active mesh, or
+    when none of its physical axes are present)."""
     mesh = get_mesh()
     if mesh is None:
         return 1
@@ -98,3 +118,52 @@ def axis_size(logical: str) -> int:
         if a in mesh.axis_names:
             n *= mesh.shape[a]
     return n
+
+
+# -- pod identity (the sweep partition, DESIGN.md §6) -----------------------
+
+def pod_count() -> int:
+    """Size of the ``pod`` axis of the active mesh (1 when no mesh is
+    active or the mesh has no pod axis) — the natural ``SweepConfig.n_pods``
+    for a mesh-driven launch."""
+    return axis_size("sweep")
+
+
+def pod_rank() -> int:
+    """This process's coordinate along the active mesh's ``pod`` axis.
+
+    Resolved from the position of the first LOCAL device in the mesh's
+    device array, so on a multi-host mesh whose hosts each hold one pod
+    slice it identifies the pod that this process drives.  Returns 0 when
+    no mesh is active, the mesh has no ``pod`` axis, or the mesh holds no
+    local device (a fully-remote mesh under single-controller dry-runs).
+    Note the single-process multi-device degenerate case: a process that
+    owns ALL pods reports rank 0 — pass ``SweepConfig.pod_index``
+    explicitly to drive pods one by one from one process (tests do).
+    """
+    import numpy as np
+    mesh = get_mesh()
+    if mesh is None or "pod" not in mesh.axis_names:
+        return 0
+    pos = np.argwhere(mesh.devices == jax.local_devices()[0])
+    if pos.size == 0:
+        return 0
+    return int(pos[0][list(mesh.axis_names).index("pod")])
+
+
+def default_pod_index(n_pods: int) -> int:
+    """The pod slice this process should execute, for ``SweepConfig`` users
+    who leave ``pod_index=None``: the mesh pod coordinate when the active
+    mesh carries a pod axis, otherwise the JAX process index
+    (one-pod-per-process multi-host launches without a mesh), wrapped into
+    range.  A pod axis whose size disagrees with ``n_pods`` raises — a
+    silent fallback would leave some pod slices assigned to no process."""
+    mesh = get_mesh()
+    if mesh is not None and "pod" in mesh.axis_names:
+        if mesh.shape["pod"] != n_pods:
+            raise ValueError(
+                f"active mesh has a {mesh.shape['pod']}-pod axis but the "
+                f"sweep was configured with n_pods={n_pods}; align them or "
+                f"pass pod_index explicitly")
+        return pod_rank()
+    return jax.process_index() % n_pods

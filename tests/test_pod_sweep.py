@@ -1,0 +1,164 @@
+"""Pod-sharded sweep execution (DESIGN.md §6) vs the single-host path.
+
+Pods are process-level: each pod runs its own ``run_sweep_batched`` with a
+disjoint round-robin slice of the chunk plan against a SHARED results_dir.
+Because every chunk's bytes are a deterministic function of the
+fingerprinted grid, the pod-sharded shard set must be BIT-identical to the
+single-host one — file names and bytes — and any pod must resume from a
+partial per-pod shard set (coverage with global gaps).  The host-local
+multi-device mesh legs live in ``test_distributed.py``.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec
+from repro.core.results import (SweepResultReader, pod_partition,
+                                pod_prefix_spans)
+from repro.core.search import SearchConfig
+from repro.core.sweep import SweepConfig, run_sweep_batched
+
+CFG = SearchConfig(width=2, kind="add", n_n=40,
+                   evolve=EvolveConfig(generations=40, lam=3))
+CONSTRAINTS = [ConstraintSpec(mae=1.0), ConstraintSpec(mae=2.0),
+               ConstraintSpec(er=50.0)]
+SEEDS = (0, 1)
+N_RUNS = len(CONSTRAINTS) * len(SEEDS)  # chunk_size 2 -> 3 chunks
+
+
+def _sweep(results_dir, **kw):
+    sweep = SweepConfig(chunk_size=2, keep_history="summary",
+                        results_dir=str(results_dir), **kw)
+    return run_sweep_batched(CFG, CONSTRAINTS, SEEDS, sweep)
+
+
+def _shard_bytes(d):
+    return {f: open(os.path.join(d, f), "rb").read()
+            for f in os.listdir(d) if f.startswith("shard_")}
+
+
+@pytest.fixture(scope="module")
+def single_host(tmp_path_factory):
+    d = tmp_path_factory.mktemp("single")
+    res = _sweep(d)
+    assert res.completed == N_RUNS
+    return str(d), res
+
+
+def test_pod_sharded_shards_bit_identical(tmp_path, single_host):
+    """Two pods against one shared dir == the single-host shard set, byte
+    for byte (the ISSUE 4 acceptance bit-identity)."""
+    sd, want = single_host
+    p0 = _sweep(tmp_path, n_pods=2, pod_index=0)
+    assert 0 < p0.completed < N_RUNS  # pod 0 owns chunks 0 and 2 only
+    assert p0.done_mask.sum() == p0.completed
+    p1 = _sweep(tmp_path, n_pods=2, pod_index=1)
+    assert p1.completed == N_RUNS and p1.done_mask.all()
+    a, b = _shard_bytes(sd), _shard_bytes(str(tmp_path))
+    assert sorted(a) == sorted(b)
+    for name in a:
+        assert a[name] == b[name], f"shard bytes differ: {name}"
+    # per-run results identical through the reader
+    ra, rb = SweepResultReader(sd), SweepResultReader(str(tmp_path))
+    assert rb.n_pods == 2 and rb.completed == N_RUNS
+    sa, sb = ra.summary(), rb.summary()
+    for key in sa:
+        np.testing.assert_array_equal(sa[key], sb[key])
+    for (rowa, ha), (rowb, hb) in zip(ra.iter_history(), rb.iter_history()):
+        np.testing.assert_array_equal(rowa, rowb)
+        for k in ha:
+            np.testing.assert_array_equal(ha[k], hb[k])
+
+
+def test_pod_resume_from_partial_pod_prefixes(tmp_path, single_host):
+    """A results_dir holding only pod 1's work (a global GAP at chunk 0) is
+    a valid resume point: the reader reports exactly pod 1's coverage, pod
+    1 re-runs nothing, and pod 0 completes the grid."""
+    sd, want = single_host
+    p1 = _sweep(tmp_path, n_pods=2, pod_index=1)  # only chunk 1 -> rows 2:4
+    assert p1.completed == 2
+    reader = SweepResultReader(str(tmp_path))
+    assert reader.spans() == [(2, 4)] and reader.completed == 2
+    assert reader.done_mask().sum() == 2
+    again = _sweep(tmp_path, n_pods=2, pod_index=1)
+    assert again.runs_per_sec == 0.0  # nothing left in pod 1's slice
+    # an interrupted pod 0 resumes from its own per-pod prefix
+    part0 = _sweep(tmp_path, n_pods=2, pod_index=0, max_chunks=1)
+    assert part0.completed == 4  # pod1's chunk + pod0's first
+    full = _sweep(tmp_path, n_pods=2, pod_index=0)
+    assert full.completed == N_RUNS and full.done_mask.all()
+    np.testing.assert_array_equal(full.metrics, want.metrics)
+    a, b = _shard_bytes(sd), _shard_bytes(str(tmp_path))
+    assert a.keys() == b.keys() and all(a[k] == b[k] for k in a)
+
+
+def test_pod_result_covers_other_pods_restored_rows(tmp_path, single_host):
+    """Each pod's SweepResult reflects total committed coverage, not just
+    its own slice — pod 1 starting after pod 0 sees pod 0's rows."""
+    _, want = single_host
+    _sweep(tmp_path, n_pods=2, pod_index=0)
+    p1 = _sweep(tmp_path, n_pods=2, pod_index=1)
+    assert p1.completed == N_RUNS
+    np.testing.assert_array_equal(p1.metrics, want.metrics)
+    np.testing.assert_array_equal(p1.feasible, want.feasible)
+
+
+def test_multi_pod_config_guards(tmp_path):
+    with pytest.raises(ValueError, match="results_dir"):
+        SweepConfig(n_pods=2)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        SweepConfig(n_pods=2, results_dir=str(tmp_path),
+                    checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="pod_index"):
+        SweepConfig(n_pods=2, results_dir=str(tmp_path), pod_index=2)
+    with pytest.raises(ValueError, match="n_pods"):
+        SweepConfig(n_pods=0)
+
+
+def test_pod_count_mismatch_refused(tmp_path):
+    """The manifest pins n_pods: relaunching the same grid with a different
+    pod partition must be an explicit reset, not silent drift."""
+    _sweep(tmp_path, n_pods=2, pod_index=0)
+    with pytest.raises(ValueError, match="n_pods"):
+        _sweep(tmp_path)  # n_pods=1 against a 2-pod directory
+
+
+def test_writer_pod_spans_filter(tmp_path):
+    """The writer's per-pod span filter follows the manifest-pinned plan
+    (and refuses to guess when no plan was pinned)."""
+    from repro.core.results import SweepResultWriter
+    kw = dict(grid_fingerprint="fp", grid_meta=[], n_runs=4, gens=8,
+              n_n=10, n_o=4, keep_history="none", chunk_size=2)
+    planned = SweepResultWriter(str(tmp_path / "a"), n_pods=2,
+                                chunk_spans=[(0, 2), (2, 4)], **kw)
+    assert planned.pod_spans(0) == [(0, 2)]
+    assert planned.pod_spans(1) == [(2, 4)]
+    planless = SweepResultWriter(str(tmp_path / "b"), **kw)
+    with pytest.raises(ValueError, match="chunk_spans"):
+        planless.pod_spans(0)
+
+
+def test_pod_partition_round_robin():
+    spans = [(0, 2), (2, 4), (4, 6), (6, 7)]
+    assert pod_partition(spans, 1) == [spans]
+    assert pod_partition(spans, 2) == [[(0, 2), (4, 6)], [(2, 4), (6, 7)]]
+    assert pod_partition(spans, 3) == [[(0, 2), (6, 7)], [(2, 4)], [(4, 6)]]
+    with pytest.raises(ValueError, match="n_pods"):
+        pod_partition(spans, 0)
+
+
+def test_pod_prefix_spans_union_of_per_pod_prefixes():
+    plan = [(0, 2), (2, 4), (4, 6), (6, 8)]
+    # n_pods=1 reduces to the global contiguous prefix
+    assert pod_prefix_spans([(0, 2), (4, 6)], plan, 1) == [(0, 2)]
+    # pod 0 owns (0,2),(4,6); pod 1 owns (2,4),(6,8)
+    assert pod_prefix_spans([(0, 2), (2, 4)], plan, 2) == [(0, 2), (2, 4)]
+    # a gap in pod 0's OWN sequence orphans its later span...
+    assert pod_prefix_spans([(4, 6), (2, 4)], plan, 2) == [(2, 4)]
+    # ...but pod 1 running ahead is fine (global gaps tolerated)
+    assert pod_prefix_spans([(2, 4), (6, 8)], plan, 2) == [(2, 4), (6, 8)]
+    # spans outside the plan are ignored entirely
+    assert pod_prefix_spans([(1, 3)], plan, 2) == []

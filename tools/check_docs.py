@@ -6,11 +6,16 @@ Verifies the documentation surface stays truthful:
   1. every relative markdown link in README/DESIGN/ROADMAP/CHANGES points at
      an existing file (and an existing heading, for #anchors);
   2. every ``DESIGN.md §N[.M]`` reference in the source tree resolves to a
-     section marker actually present in DESIGN.md;
+     section marker actually present in DESIGN.md, and DESIGN.md itself
+     still carries every required top-level section marker (§1–§6);
   3. every documented command is runnable at ``--help`` level: the ROADMAP
-     tier-1 command plus each backticked ``python ...`` command found in
-     ROADMAP.md (module/script resolved, args replaced by ``--help``), plus
-     the explicit entry-point list below.
+     tier-1 command plus each ``python ...`` command found in README.md /
+     DESIGN.md / ROADMAP.md — inline backticks AND fenced ```…``` blocks
+     (module/script resolved, args replaced by ``--help``) — plus the
+     explicit entry-point list below;
+  4. every long ``--flag`` a documented command passes actually exists in
+     that command's ``--help`` output (a doc snippet naming a flag the CLI
+     dropped — or never grew — fails here).
 
 Exit code 0 == all good; failures are listed one per line.
 """
@@ -24,22 +29,37 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md", "PAPER.md"]
+COMMAND_DOCS = ["README.md", "DESIGN.md", "ROADMAP.md"]
 SOURCE_DIRS = ["src", "benchmarks", "examples", "tests", "tools"]
+
+# top-level DESIGN.md sections that must exist (docstring references point
+# into these; §6 is the multi-host sweep surface)
+REQUIRED_DESIGN_SECTIONS = ["§1", "§2", "§3", "§4", "§5", "§6"]
 
 # argparse-bearing entry points that must answer --help (quickstart.py is
 # deliberately absent: it has no CLI and would run the full search)
 ENTRY_POINTS = [
     [sys.executable, "-m", "repro.launch.evolve", "--help"],
+    [sys.executable, "-m", "repro.launch.train", "--help"],
+    [sys.executable, "-m", "repro.launch.serve", "--help"],
+    [sys.executable, "-m", "repro.launch.dryrun", "--help"],
+    [sys.executable, "-m", "repro.launch.roofline", "--help"],
     [sys.executable, "-m", "benchmarks.run", "--help"],
     [sys.executable, "benchmarks/kernel_micro.py", "--help"],
     [sys.executable, "examples/pareto_sweep.py", "--help"],
+    [sys.executable, "examples/train_lm.py", "--help"],
     [sys.executable, "-m", "pytest", "--help"],
 ]
+
+# documented scripts that must NOT be --help-probed (no argparse: running
+# them executes the real workload)
+SKIP_HELP = {"examples/quickstart.py"}
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _SECREF = re.compile(r"DESIGN\.md\s*§(\d+(?:\.\d+)?)")
 _CMD = re.compile(r"`((?:[A-Z_][A-Z0-9_]*=\S*\s+)*(?:PYTHONPATH=\S+\s+)?"
                   r"python[^`]*)`")
+_FENCE = re.compile(r"^```")
 
 
 def _slug(heading: str) -> str:
@@ -88,7 +108,9 @@ def check_design_sections() -> list[str]:
         return ["DESIGN.md missing"]
     with open(path) as f:
         design = f.read()
-    errors = []
+    errors = [f"DESIGN.md: required section marker {sec} missing"
+              for sec in REQUIRED_DESIGN_SECTIONS
+              if not re.search(rf"^##\s+{sec}\b", design, re.M)]
     for base in SOURCE_DIRS + ["."]:
         root = os.path.join(ROOT, base)
         for dirpath, _, files in os.walk(root):
@@ -108,15 +130,20 @@ def check_design_sections() -> list[str]:
     return sorted(set(errors))
 
 
-def _help_variant(cmd: str) -> list[str] | None:
+def _tokens(cmd: str) -> list[str]:
+    """Shell-split a documented command: joined continuations, trailing
+    ``# comments`` dropped, env assignments stripped."""
+    try:
+        tokens = shlex.split(cmd.replace("\\\n", " "), comments=True)
+    except ValueError:
+        return []
+    return [t for t in tokens if "=" not in t or not
+            re.match(r"^[A-Z_][A-Z0-9_]*=", t)]  # strip env assignments
+
+
+def _help_variant(tokens: list[str]) -> list[str] | None:
     """Rewrite a documented command into its --help invocation: keep the
     interpreter and the module/script target, drop everything else."""
-    try:
-        tokens = shlex.split(cmd.replace("\\\n", " "))
-    except ValueError:
-        return None
-    tokens = [t for t in tokens if "=" not in t or not
-              re.match(r"^[A-Z_][A-Z0-9_]*=", t)]  # strip env assignments
     if not tokens or not tokens[0].startswith("python"):
         return None
     out = [sys.executable]
@@ -125,31 +152,77 @@ def _help_variant(cmd: str) -> list[str] | None:
         out += ["-m", rest[1]]
     else:
         script = next((t for t in rest if t.endswith(".py")), None)
-        if script is None:
+        if script is None or script in SKIP_HELP:
             return None
         out.append(script)
     return out + ["--help"]
 
 
+def _doc_flags(tokens: list[str]) -> set[str]:
+    """The long ``--flag`` options a documented command passes (values and
+    bracketed optional spellings like ``[--backend ...]`` excluded)."""
+    return {t.split("=")[0] for t in tokens[1:]
+            if t.startswith("--") and len(t) > 2}
+
+
+def _iter_doc_commands(text: str):
+    """Yield candidate command strings: inline backticked ``python ...``
+    commands plus every ``python``-leading line (backslash continuations
+    joined) inside fenced code blocks."""
+    for m in _CMD.finditer(text):
+        yield m.group(1)
+    in_fence, buf = False, ""
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            buf = ""
+            continue
+        if not in_fence:
+            continue
+        buf = buf + " " + line.strip() if buf else line.strip()
+        if buf.endswith("\\"):
+            buf = buf[:-1].strip()
+            continue
+        if re.match(r"^(?:[A-Z_][A-Z0-9_]*=\S+\s+)*python(\s|$)", buf):
+            yield buf
+        buf = ""
+
+
 def check_commands() -> list[str]:
-    cmds = {tuple(c) for c in ENTRY_POINTS}
-    with open(os.path.join(ROOT, "ROADMAP.md")) as f:
-        roadmap = f.read()
-    for m in _CMD.finditer(roadmap):
-        variant = _help_variant(m.group(1))
-        if variant:
-            cmds.add(tuple(variant))
+    """Every documented command answers --help, and every long flag it is
+    documented with exists in that --help output."""
+    cmds: dict[tuple, set[str]] = {tuple(c): set() for c in ENTRY_POINTS}
+    for doc in COMMAND_DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            text = f.read()
+        for cmd in _iter_doc_commands(text):
+            tokens = _tokens(cmd)
+            variant = _help_variant(tokens)
+            if variant:
+                cmds.setdefault(tuple(variant), set()).update(
+                    _doc_flags(tokens))
     env = dict(os.environ,
                PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH",
                                                               ""))
     errors = []
-    for cmd in sorted(cmds):
+    for cmd, flags in sorted(cmds.items()):
         proc = subprocess.run(list(cmd), cwd=ROOT, env=env,
                               capture_output=True, timeout=300)
         if proc.returncode != 0:
             tail = proc.stderr.decode(errors="replace").strip()[-200:]
             errors.append(f"--help failed ({proc.returncode}): "
                           f"{' '.join(cmd[1:])}: {tail}")
+            continue
+        helptext = proc.stdout.decode(errors="replace")
+        for flag in sorted(flags - {"--help"}):
+            # word boundary: a documented "--pod" must not pass because
+            # "--pod-index" exists
+            if not re.search(re.escape(flag) + r"(?![\w-])", helptext):
+                errors.append(f"documented flag {flag} not in "
+                              f"{' '.join(cmd[1:-1])} --help")
     return errors
 
 
