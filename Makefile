@@ -1,12 +1,16 @@
 # Repo entry points (run from the repo root).
-#   make test        — tier-1 suite (the ROADMAP verify command)
-#   make test-fast   — tier-1 minus the slow multi-process tests
-#   make bench-smoke — quick benchmark pass: kernel micros + sweep engine
-#   make docs-check  — README/DESIGN link + §-reference + --help check
+#   make test           — tier-1 suite (the ROADMAP verify command)
+#   make test-fast      — tier-1 minus the slow multi-process tests
+#   make bench-smoke    — quick benchmark pass: kernel micros + sweep engine
+#   make bench-check    — tiny-budget bench pass gated against the committed
+#                         baseline (what the CI bench-smoke job runs)
+#   make bench-baseline — refresh benchmarks/bench_baseline.json (commit it)
+#   make docs-check     — README/DESIGN link + §-reference + --help check
 PY ?= python
 export PYTHONPATH := src
+BENCH_JSON ?= /tmp/BENCH_local.json
 
-.PHONY: test test-fast bench-smoke docs-check
+.PHONY: test test-fast bench-smoke bench-check bench-baseline docs-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -15,7 +19,16 @@ test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
 bench-smoke:
-	$(PY) benchmarks/kernel_micro.py --only sweep,gen,results
+	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results
+
+bench-check:
+	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results --smoke \
+		--json $(BENCH_JSON)
+	$(PY) tools/check_bench.py $(BENCH_JSON)
+
+bench-baseline:
+	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results --smoke \
+		--json benchmarks/bench_baseline.json
 
 docs-check:
 	$(PY) tools/check_docs.py

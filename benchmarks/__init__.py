@@ -1,0 +1,6 @@
+"""Benchmarks package — makes every benchmark module-invocable
+(``python -m benchmarks.kernel_micro`` / ``python -m benchmarks.run``) so CI,
+the Makefile and the docs all use one entry-point spelling regardless of CWD.
+Each module adds ``src/`` to ``sys.path`` relative to its own file, so plain
+script invocation from any directory works too.
+"""

@@ -39,7 +39,11 @@ from repro.core.pareto import hypervolume_2d, metric_correlations, pareto_points
 from repro.core.results import SweepResultReader
 from repro.core.search import CircuitRecord, SearchConfig, run_sweep
 
-RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/paper")
+# default artifact dir is repo-anchored (NOT CWD-relative), so figure runs
+# land in experiments/paper/ no matter where the benchmark is invoked from
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR") or os.path.join(
+    _REPO, "experiments", "paper")
 
 # reduced-budget knobs (the full-paper protocol would use width=8,
 # n_n=400, ~1e6 evals; trends are stable from these budgets)

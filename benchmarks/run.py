@@ -13,10 +13,15 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
-sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+# CWD-independent: resolve src/ (and the benchmarks package root, for plain
+# `python /path/to/benchmarks/run.py` invocation) relative to this file
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+sys.path.insert(0, os.path.join(_HERE, ".."))
 
 
 def main() -> None:

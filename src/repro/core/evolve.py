@@ -54,6 +54,12 @@ class EvolveConfig:
     gauss_sigma: float = 256.0
     seed: int = 0
     backend: str = "jnp"         # "jnp" | "pallas" candidate evaluation
+    # Pallas evaluation-grid order (DESIGN.md §7): "genome_major",
+    # "cube_major", or "auto" (tuning-table resolution via kernels.tune).
+    # Pure execution knob — results are bit-identical across layouts, so it
+    # is deliberately NOT part of the sweep grid fingerprint (checkpoints /
+    # result shards resume across layout changes).  Ignored by backend="jnp".
+    layout: str = "auto"
 
 
 class EvalResult(NamedTuple):
@@ -126,27 +132,32 @@ def get_eval_fn(backend: str) -> Callable[..., EvalResult]:
 
 def _eval_pop_jnp(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
                   golden_vals: jax.Array, gauss_sigma: float,
-                  axis_name: str | None) -> EvalResult:
-    """Population (leading-R) evaluation: vmap of the per-genome jnp path."""
+                  axis_name: str | None, layout: str = "auto") -> EvalResult:
+    """Population (leading-R) evaluation: vmap of the per-genome jnp path.
+    ``layout`` is a Pallas-grid knob and is ignored here."""
     return jax.vmap(lambda g: _eval_jnp(g, spec, in_planes, golden_vals,
                                         gauss_sigma, axis_name))(genomes)
 
 
 def _eval_pop_pallas(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
                      golden_vals: jax.Array, gauss_sigma: float,
-                     axis_name: str | None) -> EvalResult:
+                     axis_name: str | None, layout: str = "auto"
+                     ) -> EvalResult:
     """Population evaluation as ONE fused kernel dispatch.
 
-    The stacked genome axis lands on Pallas grid dimension 0 instead of a
-    vmap batching dimension (``kernels.ops.cgp_eval_batched``).  Input-space
-    sharding (``axis_name``) stays fused: each shard dispatches the same
-    grid on its cube slice and the per-genome accumulators psum/pmax across
-    the axis inside the kernel wrapper (the cube-shard variant, DESIGN.md
-    §6) — the partials and popcounts coming back are already cube-global.
+    The stacked genome axis lands on the Pallas grid instead of a vmap
+    batching dimension (``kernels.ops.cgp_eval_batched``); ``layout`` picks
+    the grid order — genome-major or the transposed cube-major grid
+    (DESIGN.md §7), bit-identical results either way.  Input-space sharding
+    (``axis_name``) stays fused: each shard dispatches the same grid on its
+    cube slice and the per-genome accumulators psum/pmax across the axis
+    inside the kernel wrapper (the cube-shard variant, DESIGN.md §6) — the
+    partials and popcounts coming back are already cube-global.
     """
     partials, pops = kops.cgp_eval_batched(genomes, spec, in_planes,
                                            golden_vals, gauss_sigma,
-                                           axis_name=axis_name)
+                                           axis_name=axis_name,
+                                           layout=layout)
     n_total = partials.count.astype(jnp.float32)            # (R,)
     probs = pops / n_total[:, None]
     metric_vec = jax.vmap(
@@ -199,7 +210,7 @@ def make_generation_step(spec: CGPSpec, cfg: EvolveConfig,
         offspring = mutate_population(k_mut, state.parent, spec, cfg.lam,
                                       cfg.mutation_rate)
         res = eval_pop(offspring, spec, in_planes, golden_vals,
-                       cfg.gauss_sigma, axis_name)
+                       cfg.gauss_sigma, axis_name, cfg.layout)
         fits = jax.vmap(fitness_fn)(res.cost.power,
                                     res.metric_vec,
                                     jnp.broadcast_to(thresholds,
@@ -277,7 +288,7 @@ def make_batched_generation_step(spec: CGPSpec, cfg: EvolveConfig,
         flat = jax.tree.map(
             lambda x: x.reshape((C * cfg.lam,) + x.shape[2:]), offspring)
         res = eval_pop(flat, spec, in_planes, golden_vals, cfg.gauss_sigma,
-                       axis_name)
+                       axis_name, cfg.layout)
         res = jax.tree.map(
             lambda x: x.reshape((C, cfg.lam) + x.shape[1:]), res)
         fits = jax.vmap(lambda p, m, t: jax.vmap(fitness_fn)(

@@ -123,6 +123,13 @@ class SweepConfig:
     only resume state whose coverage tolerates per-pod prefixes) and refuse
     ``checkpoint_dir`` (checkpoints assume one global prefix).
 
+    ``layout`` overrides the Pallas evaluation-grid order for every chunk
+    dispatch of THIS sweep (``None`` defers to ``cfg.evolve.layout``):
+    ``"genome_major"``, ``"cube_major"``, or ``"auto"`` (measured
+    tuning-table resolution, DESIGN.md §7).  A pure execution knob — runs
+    are bit-identical across layouts, the grid fingerprint ignores it, and
+    a sweep checkpointed under one layout resumes under another.
+
     ``model_axis`` names a mesh axis of the ACTIVE ``parallel.ctx`` mesh to
     input-space-shard every dispatch over: ``evolve_chunk`` runs under
     ``shard_map`` with the cube's word axis split across it and evaluation
@@ -140,8 +147,13 @@ class SweepConfig:
     n_pods: int = 1               # pod-shard the chunk plan (DESIGN.md §6)
     pod_index: int | None = None  # this process's pod (None: resolve via ctx)
     model_axis: str | None = None  # mesh axis to shard the input cube over
+    layout: str | None = None     # Pallas grid-layout override (DESIGN.md §7)
 
     def __post_init__(self):
+        if self.layout not in (None, "auto", "genome_major", "cube_major"):
+            raise ValueError(
+                f"layout must be None, 'auto', 'genome_major' or "
+                f"'cube_major', got {self.layout!r}")
         if self.chunk_size < 1:
             raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
         if self.checkpoint_every < 1:
@@ -492,6 +504,8 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         orig = sel[:n]  # grid-order rows this chunk fills
         sigma = float(sigmas[orig[0]])
         ecfg = dataclasses.replace(cfg.evolve, gauss_sigma=sigma, seed=0)
+        if sweep.layout is not None:
+            ecfg = dataclasses.replace(ecfg, layout=sweep.layout)
 
         if sweep.model_axis is not None:
             evolve_call = _sharded_chunk_fn(ctx.get_mesh(), sweep.model_axis,

@@ -8,23 +8,36 @@ same pass unpacks integer outputs and accumulates every error-metric partial
 so a candidate costs exactly one HBM read of its input-plane block and O(10)
 scalars of HBM write-back.
 
-Grid: ``(R, W // bw)`` — the GENOME axis is grid dimension 0 (one sweep-chunk
-of ``runs × λ`` candidates per dispatch, ``core.sweep``/``core.evolve`` flatten
-the population into it) and the input-cube block axis is dimension 1.  The
-whole population is ONE dispatch with the run axis on the grid instead of a
-``jax.vmap`` batching dimension.  Outputs use the standard Pallas
-revisiting-accumulator pattern per genome: every cube block of genome ``r``
-maps to output row ``r``, initialized at block 0.  The cube axis must be
-INNERMOST for that pattern (an accumulator row's visits have to be
-consecutive grid steps), which means each genome still streams the input
-cube from HBM once — same per-candidate traffic as the paper's formulation;
-what the fused grid removes is the per-genome dispatch/trace overhead, and
-the input-plane/golden index maps ignore ``r`` so the pipeliner skips the
-re-fetch whenever a block's index is unchanged between consecutive steps
-(always true for the common sub-word-cube test widths, where W == bw).
-Cross-genome cube-block reuse at paper scale would need the transposed grid
-plus accumulators in flushed VMEM scratch — ROADMAP, transposed-grid item.
-Input-space sharding composes with the fused grid through
+Two evaluation-grid LAYOUTS share one kernel body (DESIGN.md §7; the Pallas
+grid runs sequentially with the LAST dimension innermost):
+
+* ``layout="genome_major"`` — grid ``(R, W // bw)``: the GENOME axis is grid
+  dimension 0 (one sweep-chunk of ``runs × λ`` candidates per dispatch,
+  ``core.sweep``/``core.evolve`` flatten the population into it) and the
+  input-cube block axis is dimension 1.  Outputs use the standard Pallas
+  revisiting-accumulator pattern per genome: every cube block of genome ``r``
+  maps to output row ``r``, initialized at block 0.  The cube axis must be
+  INNERMOST for that pattern (an accumulator row's visits have to be
+  consecutive grid steps), which means each genome streams the input cube
+  from HBM once — same per-candidate traffic as the paper's formulation;
+  what the fused grid removes is the per-genome dispatch/trace overhead.
+* ``layout="cube_major"`` — the transposed grid ``(W // bw, R)``: the cube
+  block axis is OUTER and the genome axis inner, so one cube block is loaded
+  once and reused across the whole (chunk × λ) population before the next
+  block streams in — per-dispatch HBM cube traffic drops from R reads of the
+  cube to ONE (the input-plane/golden index maps ignore the inner genome
+  index, so the pipeliner skips the re-fetch between consecutive steps).
+  The revisiting-accumulator pattern no longer applies (a genome's visits
+  are W//bw grid steps apart), so the per-genome accumulators live in
+  explicitly-allocated ``(Rp, ·)`` VMEM scratch — zeroed at grid step
+  (0, 0), accumulated row-wise every step, and flushed to the ``(R, ·)``
+  output refs only on a genome's LAST cube step (§7.2 flush semantics).
+
+Both layouts accumulate each genome's cube blocks in the same ascending
+order, so their outputs are bit-identical (including the float32 ``rel_sum``
+row) — layout is a pure execution knob, picked per (width, R, backend) by
+``kernels.tune`` when callers pass ``layout="auto"``.  Input-space sharding
+composes with the fused grid in either layout through
 ``cgp_sim_metrics_batched_sharded`` (per-genome accumulators psum/pmax
 across the mesh axis — DESIGN.md §6).
 
@@ -41,7 +54,11 @@ VMEM budget at the paper scale (8x8 multiplier, 400 nodes, block=512 words):
   the genome grid axis adds only the nodes/outs/accumulator rows (the wire
   scratch is reused across ``r``), so the fused (runs × λ) grid stays at
   ~1 MB total, comfortably inside the ~16 MB/core budget, and the block
-  shape keeps the lane dimension at 512 (mod-128 aligned).
+  shape keeps the lane dimension at 512 (mod-128 aligned).  The cube-major
+  layout additionally holds ALL Rp accumulator rows in scratch:
+  ``Rp × (N_SUMS + 1 + n_bins + n_n) × 4 B`` ≈ 1.7 KB/genome at 400 nodes —
+  a chunk×λ population of 256 adds ~0.43 MB, and the layout stays inside
+  the VMEM budget up to Rp ≈ 8k genomes per dispatch.
 """
 from __future__ import annotations
 
@@ -83,20 +100,16 @@ def _split_sum(v: jax.Array) -> tuple[jax.Array, jax.Array]:
     return hi, lo
 
 
-def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
-                   sums_ref, wce_ref, hist_ref, pops_ref, wires,
-                   *, n_i: int, n_n: int, n_o: int,
-                   gauss_sigma: float, n_gauss_side: int, n_bins: int):
-    """One (genome r, cube block w) grid step of the fused evaluation."""
-    blk = pl.program_id(1)
+def _sim_block_partials(nodes_ref, outs_ref, planes_ref, golden_ref, wires,
+                        *, n_i: int, n_n: int, n_o: int, gauss_sigma: float,
+                        n_gauss_side: int, n_bins: int):
+    """One genome × one cube block: netlist walk + fused metric partials.
 
-    @pl.when(blk == 0)
-    def _init():
-        sums_ref[...] = jnp.zeros_like(sums_ref)
-        wce_ref[...] = jnp.zeros_like(wce_ref)
-        hist_ref[...] = jnp.zeros_like(hist_ref)
-        pops_ref[...] = jnp.zeros_like(pops_ref)
-
+    Shared by both layout kernels — the layouts differ only in grid order
+    and in WHERE the partials accumulate (output refs vs VMEM scratch).
+    Returns ``(upd (N_SUMS,) f32, wce (scalar i32), hist (n_bins,) f32,
+    pops (n_n,) f32)`` for this block.
+    """
     bw = planes_ref.shape[1]
 
     # --- phase 1: netlist walk over the VMEM wire plane -------------------
@@ -119,7 +132,6 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
     gate_planes = wires[n_i:n_i + n_n, :]
     pops = jax.lax.population_count(
         gate_planes.view(jnp.uint32)).astype(jnp.float32).sum(axis=1)
-    pops_ref[...] += pops[None, :]
 
     # --- phase 2: unpack outputs, fuse metric partials ---------------------
     lanes = jax.lax.broadcasted_iota(jnp.int32, (bw, 32), 1)
@@ -147,9 +159,6 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
     upd = upd.at[ACC0_BAD].set(
         ((g == 0) & (vals != 0)).astype(jnp.float32).sum())
     upd = upd.at[COUNT].set(float(32) * bw)
-    sums_ref[...] += upd[None, :]
-
-    wce_ref[0, 0] = jnp.maximum(wce_ref[0, 0], ad.max())
 
     # σ-wide histogram bins over ±n_side·σ (+2 tails); scatter-free: static
     # per-bin masked reductions (TPU-friendly, n_bins ~ 10)
@@ -160,18 +169,96 @@ def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
     hist_upd = jnp.zeros((n_bins,), jnp.float32)
     for b in range(n_bins):  # static unroll
         hist_upd = hist_upd.at[b].set(((idx == b) & nz).astype(jnp.float32).sum())
+
+    return upd, ad.max(), hist_upd, pops
+
+
+def cgp_sim_kernel(nodes_ref, outs_ref, planes_ref, golden_ref,
+                   sums_ref, wce_ref, hist_ref, pops_ref, wires,
+                   *, n_i: int, n_n: int, n_o: int,
+                   gauss_sigma: float, n_gauss_side: int, n_bins: int):
+    """Genome-major (genome r, cube block w) grid step: the cube axis is
+    innermost, so the ``(1, ·)`` output blocks are revisiting accumulators —
+    initialized at a genome's block 0 and accumulated in place."""
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        wce_ref[...] = jnp.zeros_like(wce_ref)
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+        pops_ref[...] = jnp.zeros_like(pops_ref)
+
+    upd, wce, hist_upd, pops = _sim_block_partials(
+        nodes_ref, outs_ref, planes_ref, golden_ref, wires, n_i=n_i, n_n=n_n,
+        n_o=n_o, gauss_sigma=gauss_sigma, n_gauss_side=n_gauss_side,
+        n_bins=n_bins)
+
+    pops_ref[...] += pops[None, :]
+    sums_ref[...] += upd[None, :]
+    wce_ref[0, 0] = jnp.maximum(wce_ref[0, 0], wce)
     hist_ref[...] += hist_upd[None, :]
+
+
+def cgp_sim_kernel_cube_major(nodes_ref, outs_ref, planes_ref, golden_ref,
+                              sums_ref, wce_ref, hist_ref, pops_ref,
+                              wires, sums_acc, wce_acc, hist_acc, pops_acc,
+                              *, n_i: int, n_n: int, n_o: int,
+                              gauss_sigma: float, n_gauss_side: int,
+                              n_bins: int):
+    """Cube-major (cube block w, genome r) grid step (DESIGN.md §7.2).
+
+    The genome axis is innermost, so one cube block stays resident while
+    every genome consumes it — but a genome's visits are now W//bw grid
+    steps apart, which breaks the revisiting-accumulator pattern on the
+    output refs.  Per-genome accumulators therefore live in ``(Rp, ·)``
+    VMEM scratch: zeroed once at grid step (0, 0), accumulated at row ``r``
+    every step, and flushed to the ``(1, ·)`` output block only on the last
+    cube step.  (Output blocks written back before the flush step carry
+    whatever the ref held — harmless: each output row's LAST write-back is
+    its flush, which overwrites them.)
+    """
+    blk, r = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(jnp.logical_and(blk == 0, r == 0))
+    def _init():
+        sums_acc[...] = jnp.zeros_like(sums_acc)
+        wce_acc[...] = jnp.zeros_like(wce_acc)
+        hist_acc[...] = jnp.zeros_like(hist_acc)
+        pops_acc[...] = jnp.zeros_like(pops_acc)
+
+    upd, wce, hist_upd, pops = _sim_block_partials(
+        nodes_ref, outs_ref, planes_ref, golden_ref, wires, n_i=n_i, n_n=n_n,
+        n_o=n_o, gauss_sigma=gauss_sigma, n_gauss_side=n_gauss_side,
+        n_bins=n_bins)
+
+    row = (pl.ds(r, 1), slice(None))
+    # same per-genome accumulation order over cube blocks as genome-major
+    # (w ascending), so the float32 sums are bit-identical across layouts
+    pl.store(pops_acc, row, pl.load(pops_acc, row) + pops[None, :])
+    pl.store(sums_acc, row, pl.load(sums_acc, row) + upd[None, :])
+    pl.store(wce_acc, row, jnp.maximum(pl.load(wce_acc, row),
+                                       wce[None, None]))
+    pl.store(hist_acc, row, pl.load(hist_acc, row) + hist_upd[None, :])
+
+    @pl.when(blk == pl.num_programs(0) - 1)
+    def _flush():
+        sums_ref[...] = pl.load(sums_acc, row)
+        wce_ref[...] = pl.load(wce_acc, row)
+        hist_ref[...] = pl.load(hist_acc, row)
+        pops_ref[...] = pl.load(pops_acc, row)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("n_i", "n_n", "n_o", "gauss_sigma", "n_gauss_side",
-                     "block_words", "r_tile", "interpret"))
+                     "block_words", "r_tile", "layout", "interpret"))
 def cgp_sim_metrics_batched(nodes: jax.Array, outs: jax.Array,
                             in_planes: jax.Array, golden_vals: jax.Array,
                             *, n_i: int, n_n: int, n_o: int,
                             gauss_sigma: float = 256.0, n_gauss_side: int = 4,
                             block_words: int = 512, r_tile: int = 8,
+                            layout: str = "genome_major",
                             interpret: bool = True):
     """Fused (runs × λ) pallas_call: ONE dispatch for R stacked genomes.
 
@@ -182,10 +269,22 @@ def cgp_sim_metrics_batched(nodes: jax.Array, outs: jax.Array,
       r_tile: sublane-alignment pad of the genome axis; R is padded up to a
         multiple with copies of the last genome, sliced off on return, so
         ragged R (e.g. a non-multiple sweep-chunk tail) is transparent.
+      layout: evaluation-grid order (DESIGN.md §7).  ``"genome_major"`` puts
+        the genome axis on grid dim 0 (cube innermost, output refs are
+        revisiting accumulators); ``"cube_major"`` transposes the grid (cube
+        outer, genomes inner, accumulators in flushed VMEM scratch) so one
+        cube block is reused across the whole population.  Outputs are
+        bit-identical across layouts; resolve ``"auto"`` upstream
+        (``kernels.tune`` / ``ops.cgp_eval_batched``) — this function only
+        accepts the two concrete spellings.
     Returns per-genome accumulators
       (sums (R, N_SUMS) f32, wce (R, 1) i32, hist (R, n_bins) f32,
        pops (R, n_n) f32).
     """
+    if layout not in ("genome_major", "cube_major"):
+        raise ValueError(
+            f"layout must be 'genome_major' or 'cube_major', got {layout!r} "
+            "(resolve 'auto' via kernels.tune before the kernel call)")
     R = nodes.shape[0]
     r_pad = (-R) % r_tile
     if r_pad:
@@ -201,31 +300,51 @@ def cgp_sim_metrics_batched(nodes: jax.Array, outs: jax.Array,
     n_wires = n_i + n_n
     golden_blocks = golden_vals.reshape(W // bw, bw * 32)
 
-    kernel = functools.partial(
-        cgp_sim_kernel, n_i=n_i, n_n=n_n, n_o=n_o, gauss_sigma=gauss_sigma,
-        n_gauss_side=n_gauss_side, n_bins=n_bins)
-
     out_shapes = (
         jax.ShapeDtypeStruct((Rp, N_SUMS), jnp.float32),
         jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
         jax.ShapeDtypeStruct((Rp, n_bins), jnp.float32),
         jax.ShapeDtypeStruct((Rp, n_n), jnp.float32),
     )
-    grid = (Rp, W // bw)
-    acc_spec = lambda cols: pl.BlockSpec((1, cols), lambda r, w: (r, 0))
+    scratch_shapes = [pltpu.VMEM((n_wires, bw), jnp.int32)]  # wire plane
+    if layout == "genome_major":
+        kernel = functools.partial(
+            cgp_sim_kernel, n_i=n_i, n_n=n_n, n_o=n_o,
+            gauss_sigma=gauss_sigma, n_gauss_side=n_gauss_side, n_bins=n_bins)
+        grid = (Rp, W // bw)
+        genome_blk = lambda r, w: (r, 0)
+        nodes_blk = lambda r, w: (r, 0, 0)
+        planes_blk = lambda r, w: (0, w)
+        golden_blk = lambda r, w: (w, 0)
+    else:  # cube_major: transposed grid, accumulators in VMEM scratch
+        kernel = functools.partial(
+            cgp_sim_kernel_cube_major, n_i=n_i, n_n=n_n, n_o=n_o,
+            gauss_sigma=gauss_sigma, n_gauss_side=n_gauss_side, n_bins=n_bins)
+        grid = (W // bw, Rp)
+        genome_blk = lambda w, r: (r, 0)
+        nodes_blk = lambda w, r: (r, 0, 0)
+        planes_blk = lambda w, r: (0, w)
+        golden_blk = lambda w, r: (w, 0)
+        scratch_shapes += [
+            pltpu.VMEM((Rp, N_SUMS), jnp.float32),   # sums_acc
+            pltpu.VMEM((Rp, 1), jnp.int32),          # wce_acc
+            pltpu.VMEM((Rp, n_bins), jnp.float32),   # hist_acc
+            pltpu.VMEM((Rp, n_n), jnp.float32),      # pops_acc
+        ]
+    acc_spec = lambda cols: pl.BlockSpec((1, cols), genome_blk)
     sums, wce, hist, pops = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, n_n, 3), lambda r, w: (r, 0, 0)),  # genome nodes
-            pl.BlockSpec((1, n_o), lambda r, w: (r, 0)),        # genome outs
-            pl.BlockSpec((n_i, bw), lambda r, w: (0, w)),       # planes blk
-            pl.BlockSpec((1, bw * 32), lambda r, w: (w, 0)),    # golden blk
+            pl.BlockSpec((1, n_n, 3), nodes_blk),   # genome nodes
+            pl.BlockSpec((1, n_o), genome_blk),     # genome outs
+            pl.BlockSpec((n_i, bw), planes_blk),    # planes blk
+            pl.BlockSpec((1, bw * 32), golden_blk),  # golden blk
         ],
         out_specs=(acc_spec(N_SUMS), acc_spec(1), acc_spec(n_bins),
                    acc_spec(n_n)),
         out_shape=out_shapes,
-        scratch_shapes=[pltpu.VMEM((n_wires, bw), jnp.int32)],
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(nodes, outs, in_planes, golden_blocks)
     if r_pad:
@@ -240,6 +359,7 @@ def cgp_sim_metrics_batched_sharded(nodes: jax.Array, outs: jax.Array,
                                     n_o: int, gauss_sigma: float = 256.0,
                                     n_gauss_side: int = 4,
                                     block_words: int = 512, r_tile: int = 8,
+                                    layout: str = "genome_major",
                                     interpret: bool = True):
     """Cube-shard variant of the fused batched kernel (DESIGN.md §6).
 
@@ -268,7 +388,8 @@ def cgp_sim_metrics_batched_sharded(nodes: jax.Array, outs: jax.Array,
     sums, wce, hist, pops = cgp_sim_metrics_batched(
         nodes, outs, in_planes, golden_vals, n_i=n_i, n_n=n_n, n_o=n_o,
         gauss_sigma=gauss_sigma, n_gauss_side=n_gauss_side,
-        block_words=block_words, r_tile=r_tile, interpret=interpret)
+        block_words=block_words, r_tile=r_tile, layout=layout,
+        interpret=interpret)
     return (jax.lax.psum(sums, axis_name), jax.lax.pmax(wce, axis_name),
             jax.lax.psum(hist, axis_name), jax.lax.psum(pops, axis_name))
 

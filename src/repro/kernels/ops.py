@@ -16,6 +16,7 @@ from repro.core.genome import CGPSpec, Genome
 from repro.kernels import cgp_sim as _cgp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import lut_matmul as _lut
+from repro.kernels import tune as _tune
 
 
 def _on_tpu() -> bool:
@@ -82,8 +83,10 @@ def cgp_eval(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
 
 def cgp_eval_batched(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
                      golden_vals: jax.Array, gauss_sigma: float = 256.0,
-                     block_words: int = 512, interpret: bool | None = None,
-                     r_tile: int | None = None, axis_name: str | None = None
+                     block_words: int | None = None,
+                     interpret: bool | None = None,
+                     r_tile: int | None = None, axis_name: str | None = None,
+                     layout: str = "auto"
                      ) -> tuple[M.MetricPartials, jax.Array]:
     """Fused (runs × λ) population evaluation in ONE kernel dispatch.
 
@@ -101,17 +104,48 @@ def cgp_eval_batched(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
     returned partials and popcounts are already cube-global.  Only callable
     where the axis is bound (e.g. under ``shard_map``).
 
-    ``r_tile=None`` picks the genome-axis pad automatically: sublane padding
-    only helps the Mosaic lowering, while interpret mode pays every pad row
-    as a full recomputed evaluation — so 8 when compiled, 1 interpreted.
+    ``block_words=None`` / ``r_tile=None`` pick the kernel execution point
+    automatically: under ``layout="auto"`` the whole MEASURED winner variant
+    is adopted — layout AND block size AND genome-axis pad together, since
+    the tuning pass times them jointly (``kernels.tune.resolve_variant``,
+    keyed by (width, R, backend); a half-adopted variant could be slower
+    than either the winner or the default).  With an explicit layout, or no
+    table entry, the defaults are 512 words and the interpret-aware pad
+    (sublane padding only helps the Mosaic lowering, while interpret mode
+    pays every pad row as a full recomputed evaluation — so 8 when
+    compiled, 1 interpreted).  Passing either knob explicitly overrides the
+    tuned value for that knob only.
+
+    ``layout`` picks the evaluation-grid order (DESIGN.md §7):
+    ``"genome_major"`` (cube innermost per genome) or ``"cube_major"``
+    (transposed grid — one cube block reused across the whole population,
+    per-genome accumulators in flushed VMEM scratch).  Results are
+    bit-identical either way.  The default ``"auto"`` resolves through the
+    measured tuning table; with no table entry it falls back to
+    genome-major.  Resolution happens at trace time (R and the backend are
+    static), so it costs nothing per step.
     """
     if interpret is None:
         interpret = default_interpret()
+    variant = None
+    if layout == "auto":
+        # on a full table miss, fall back to the same execution point an
+        # explicit layout would get (incl. the interpret-aware pad)
+        variant = _tune.resolve_variant(
+            spec.n_i // 2, genomes.nodes.shape[0],
+            _tune.backend_key(interpret),
+            default=_tune.KernelVariant(r_tile=1 if interpret else 8))
+        layout = variant.layout
+    if block_words is None:
+        # tuned blocks are measured per width, and every candidate is a
+        # power of two, so they divide any (power-of-two) cube shard too
+        block_words = variant.block_words if variant is not None else 512
     if r_tile is None:
-        r_tile = 1 if interpret else 8
+        r_tile = variant.r_tile if variant is not None \
+            else (1 if interpret else 8)
     kw = dict(n_i=spec.n_i, n_n=spec.n_n, n_o=spec.n_o,
               gauss_sigma=gauss_sigma, block_words=block_words,
-              r_tile=r_tile, interpret=interpret)
+              r_tile=r_tile, layout=layout, interpret=interpret)
     if axis_name is None:
         sums, wce, hist, pops = _cgp.cgp_sim_metrics_batched(
             genomes.nodes, genomes.outs, in_planes, golden_vals, **kw)

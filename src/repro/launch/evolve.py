@@ -58,6 +58,15 @@ def main():
                     help="candidate evaluation: pure-jnp or the fused "
                          "(runs x lambda) Pallas kernel (one dispatch per "
                          "generation in the batched engine; interpret on CPU)")
+    ap.add_argument("--layout", default="auto",
+                    choices=["auto", "genome_major", "cube_major"],
+                    help="Pallas evaluation-grid order (backend=pallas, "
+                         "DESIGN.md section 7): genome_major streams the "
+                         "input cube per genome, cube_major reuses each "
+                         "cube block across the whole population (VMEM "
+                         "scratch accumulators); auto resolves the measured "
+                         "tuning table.  Results are bit-identical either "
+                         "way")
     ap.add_argument("--out", default=None)
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="runs per jit'd batch of the sweep engine")
@@ -97,7 +106,7 @@ def main():
     cfg = SearchConfig(
         width=args.width, kind=args.kind, n_n=args.nodes,
         evolve=EvolveConfig(generations=args.generations, lam=args.lam,
-                            backend=args.backend))
+                            backend=args.backend, layout=args.layout))
     constraints = [parse_constraint(c) for c in args.constraint]
     if args.serial:
         records = run_sweep_serial(cfg, constraints, seeds=range(args.seeds))
@@ -112,7 +121,7 @@ def main():
         sweep = SweepConfig(chunk_size=args.chunk_size,
                             checkpoint_dir=args.checkpoint_dir,
                             results_dir=args.results_dir,
-                            keep_history=mode,
+                            keep_history=mode, layout=args.layout,
                             n_pods=args.pods, pod_index=pod)
         result = run_sweep_batched(cfg, constraints, seeds=range(args.seeds),
                                    sweep=sweep)

@@ -1,0 +1,146 @@
+#!/usr/bin/env python
+"""Benchmark regression gate (the CI ``bench-smoke`` job; ``make bench-check``).
+
+Compares a ``BENCH_*.json`` produced by
+``python -m benchmarks.kernel_micro --smoke --json BENCH_<sha>.json``
+against the committed baseline (``benchmarks/bench_baseline.json``) and
+exits non-zero when any tracked metric regresses by more than
+``--max-regression`` (default 30%, absorbing runner noise while catching
+real slowdowns — an accidental 2× would trip it many times over).
+
+Metric direction is inferred from the key, the same naming contract
+``kernel_micro`` uses throughout:
+
+  * lower-is-better: ``*_us_per_*``, ``*_ms`` — latency keys;
+  * higher-is-better: ``*_per_s*``, ``*_speedup`` — throughput/ratio keys;
+  * everything else (``n_runs``, ``row_kb``, the ``_meta`` block) is shape
+    metadata and ignored.
+
+Keys present on only one side are reported but never fail the gate (new
+benches must be able to land before their first baseline refresh).  Refresh
+the baseline deliberately with ``make bench-baseline`` after a change that
+legitimately moves the numbers, and commit it — the committed trajectory of
+``BENCH_*`` artifacts plus this gate is the repo's perf history.
+
+The ``*_per_s`` keys are absolute and therefore machine-dependent: a
+baseline measured on one host gates a runner class honestly only after one
+refresh ON that class.  If the gate goes red on a hardware change rather
+than a code change (every key shifted together, ``*_speedup`` ratios
+steady), refresh the baseline from the uploaded ``BENCH_<sha>.json``
+artifact of a known-good commit on the new runner class and commit that —
+or widen the gate once via the ``BENCH_MAX_REGRESSION`` env var while the
+refresh lands.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "bench_baseline.json")
+
+# keys that look numeric but are workload shape, not performance
+IGNORED = {"n_runs", "row_kb"}
+
+
+def flatten(tree: dict, prefix: str = "") -> dict[str, float]:
+    """``{"sweep": {"x_per_s": 1.0}} -> {"sweep.x_per_s": 1.0}`` (numeric
+    leaves only; the ``_meta`` block and shape keys are dropped)."""
+    out: dict[str, float] = {}
+    for key, val in tree.items():
+        if key == "_meta" or key in IGNORED:
+            continue
+        name = f"{prefix}{key}"
+        if isinstance(val, dict):
+            out.update(flatten(val, name + "."))
+        elif isinstance(val, (int, float)) and not isinstance(val, bool):
+            out[name] = float(val)
+    return out
+
+
+def direction(key: str) -> str | None:
+    """'up' (higher better), 'down' (lower better) or None (untracked)."""
+    leaf = key.rsplit(".", 1)[-1]
+    if "_us_per_" in leaf or leaf.endswith("_ms"):
+        return "down"
+    if "_per_s" in leaf or leaf.endswith("_speedup"):
+        return "up"
+    return None
+
+
+def compare(current: dict, baseline: dict, max_regression: float
+            ) -> tuple[list[str], list[str]]:
+    """Returns (failures, report_lines)."""
+    cur, base = flatten(current), flatten(baseline)
+    failures, lines = [], []
+    for key in sorted(set(cur) | set(base)):
+        d = direction(key)
+        if d is None:
+            continue
+        if key not in base:
+            lines.append(f"  NEW  {key} = {cur[key]:.4g} (no baseline)")
+            continue
+        if key not in cur:
+            lines.append(f"  GONE {key} (baseline {base[key]:.4g}; "
+                         f"not failing — refresh the baseline)")
+            continue
+        b, c = base[key], cur[key]
+        if b <= 0:
+            continue
+        change = (c - b) / b if d == "down" else (b - c) / b
+        mark = "ok"
+        if change > max_regression:
+            mark = "FAIL"
+            failures.append(
+                f"{key}: {'slower' if d == 'down' else 'dropped'} "
+                f"{100 * change:.1f}% (baseline {b:.4g} -> {c:.4g}, "
+                f"limit {100 * max_regression:.0f}%)")
+        lines.append(f"  {mark:4s} {key}: {b:.4g} -> {c:.4g} "
+                     f"({'+' if change <= 0 else '-'}"
+                     f"{100 * abs(change):.1f}% vs limit "
+                     f"{100 * max_regression:.0f}%)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="BENCH_*.json written by "
+                                    "benchmarks.kernel_micro --json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline (default: "
+                         "benchmarks/bench_baseline.json)")
+    ap.add_argument("--max-regression", type=float,
+                    default=float(os.environ.get("BENCH_MAX_REGRESSION",
+                                                 "0.30")),
+                    help="fail above this fractional regression (default "
+                         "0.30, or the BENCH_MAX_REGRESSION env var)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if not os.path.exists(args.baseline):
+        print(f"check_bench: no baseline at {args.baseline} — nothing to "
+              f"gate (commit one with `make bench-baseline`)")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures, lines = compare(current, baseline, args.max_regression)
+    print(f"check_bench: {args.current} vs {args.baseline}")
+    for line in lines:
+        print(line)
+    if failures:
+        print(f"check_bench: {len(failures)} regression(s) past the "
+              f"{100 * args.max_regression:.0f}% gate:")
+        for fail in failures:
+            print(f"FAIL {fail}")
+        return 1
+    print("check_bench OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,8 +33,9 @@ COMMAND_DOCS = ["README.md", "DESIGN.md", "ROADMAP.md"]
 SOURCE_DIRS = ["src", "benchmarks", "examples", "tests", "tools"]
 
 # top-level DESIGN.md sections that must exist (docstring references point
-# into these; §6 is the multi-host sweep surface)
-REQUIRED_DESIGN_SECTIONS = ["§1", "§2", "§3", "§4", "§5", "§6"]
+# into these; §6 is the multi-host sweep surface, §7 the kernel-layout /
+# tuning surface)
+REQUIRED_DESIGN_SECTIONS = ["§1", "§2", "§3", "§4", "§5", "§6", "§7"]
 
 # argparse-bearing entry points that must answer --help (quickstart.py is
 # deliberately absent: it has no CLI and would run the full search)
@@ -45,11 +46,21 @@ ENTRY_POINTS = [
     [sys.executable, "-m", "repro.launch.dryrun", "--help"],
     [sys.executable, "-m", "repro.launch.roofline", "--help"],
     [sys.executable, "-m", "benchmarks.run", "--help"],
-    [sys.executable, "benchmarks/kernel_micro.py", "--help"],
+    [sys.executable, "-m", "benchmarks.kernel_micro", "--help"],
     [sys.executable, "examples/pareto_sweep.py", "--help"],
     [sys.executable, "examples/train_lm.py", "--help"],
+    [sys.executable, "tools/check_bench.py", "--help"],
     [sys.executable, "-m", "pytest", "--help"],
 ]
+
+# flags that must exist in specific --help outputs even when no doc snippet
+# happens to pass them (the layout/tuning surface of DESIGN.md §7)
+REQUIRED_FLAGS = {
+    ("-m", "repro.launch.evolve"): ["--layout", "--backend"],
+    ("-m", "benchmarks.kernel_micro"): ["--layout", "--tune", "--json",
+                                        "--smoke"],
+    ("tools/check_bench.py",): ["--baseline", "--max-regression"],
+}
 
 # documented scripts that must NOT be --help-probed (no argparse: running
 # them executes the real workload)
@@ -192,6 +203,9 @@ def check_commands() -> list[str]:
     """Every documented command answers --help, and every long flag it is
     documented with exists in that --help output."""
     cmds: dict[tuple, set[str]] = {tuple(c): set() for c in ENTRY_POINTS}
+    for target, flags in REQUIRED_FLAGS.items():
+        cmds.setdefault((sys.executable, *target, "--help"),
+                        set()).update(flags)
     for doc in COMMAND_DOCS:
         path = os.path.join(ROOT, doc)
         if not os.path.exists(path):
