@@ -1,6 +1,8 @@
 # Repo entry points (run from the repo root).
-#   make test           — tier-1 suite (the ROADMAP verify command)
-#   make test-fast      — tier-1 minus the slow multi-process tests
+#   make test           — tier-1 suite (the ROADMAP verify command; pytest.ini
+#                         deselects slow + kernel_diff legs by default)
+#   make test-full      — everything, markers included (the CI tier1 job)
+#   make test-fast      — alias of the tier-1 default
 #   make bench-smoke    — quick benchmark pass: kernel micros + sweep engine
 #   make bench-check    — tiny-budget bench pass gated against the committed
 #                         baseline (what the CI bench-smoke job runs)
@@ -10,13 +12,17 @@ PY ?= python
 export PYTHONPATH := src
 BENCH_JSON ?= /tmp/BENCH_local.json
 
-.PHONY: test test-fast bench-smoke bench-check bench-baseline docs-check
+.PHONY: test test-full test-fast bench-smoke bench-check bench-baseline \
+	docs-check
 
 test:
 	$(PY) -m pytest -x -q
 
+test-full:
+	$(PY) -m pytest -q -m ""
+
 test-fast:
-	$(PY) -m pytest -x -q -m "not slow"
+	$(PY) -m pytest -x -q -m "not slow and not kernel_diff"
 
 bench-smoke:
 	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results

@@ -118,7 +118,9 @@ def bench_generation_rate(width: int = 8, gens: int = 100, lam: int = 8,
 
 def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
                 n_seeds: int = 2, backends: tuple = ("jnp", "pallas"),
-                layouts: tuple = ("genome_major", "cube_major")):
+                layouts: tuple = ("genome_major", "cube_major"),
+                dedup_width: int = 6, dedup_gens: int = 60,
+                dedup_n_n: int = 300, dedup_mutation_rate: float = 0.0005):
     """Constraint-grid throughput (runs/s): batched engine vs serial loop,
     with a ``backend`` axis over the candidate-evaluation path and — for
     the pallas backend — a ``layout`` axis over the evaluation-grid order
@@ -131,6 +133,13 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
     interpret mode, so their runs/s are correctness-path references; the
     jnp-vs-pallas and layout gaps worth tracking are on a TPU backend
     (interpret mode hides the HBM reuse cube-major buys).
+
+    The ``dedup_*`` legs time the phenotype-dedup cache (DESIGN.md §8) on a
+    deliberately neutral-mutation-heavy grid — wide cube, big genome, low
+    mutation rate, the regime where most offspring share an active subgraph
+    with their parent and the cache's skipped kernel dispatches dominate its
+    host-side hashing cost.  Emits cached vs uncached effective runs/s and
+    the measured cache hit rate.
     """
     import dataclasses
 
@@ -172,6 +181,26 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
                 one(backend, layout, tag=f"pallas_{layout}")
         else:
             one(backend)
+
+    # --- phenotype-dedup legs (DESIGN.md §8): neutral-mutation-heavy grid --
+    dcfg = SearchConfig(
+        width=dedup_width, n_n=dedup_n_n,
+        evolve=EvolveConfig(generations=dedup_gens, lam=lam,
+                            mutation_rate=dedup_mutation_rate,
+                            backend=backends[0]))
+    dcons = cons[:4]  # one σ group (shared default σ): one trace per leg
+    dn = len(dcons) * len(seeds)
+    for tag, on in (("dedup_off", False), ("dedup", True)):
+        sw = SweepConfig(chunk_size=dn, keep_history=False, dedup=on)
+        run_sweep_batched(dcfg, dcons, seeds, sw)  # compile
+        t0 = time.perf_counter()
+        res = run_sweep_batched(dcfg, dcons, seeds, sw)
+        t_d = time.perf_counter() - t0
+        out[f"{tag}_runs_per_s"] = dn / t_d
+        if on:
+            out["dedup_speedup"] = (out["dedup_runs_per_s"]
+                                    / out["dedup_off_runs_per_s"])
+            out["dedup_hit_rate"] = res.dedup_stats["hit_rate"]
     return out
 
 
@@ -254,7 +283,8 @@ SMOKE = {
     "eval": dict(width=6, lam=4),
     "gen": dict(width=6, gens=40, lam=4, n_n=200),
     "pallas": dict(width=5),
-    "sweep": dict(width=2, gens=100, n_seeds=1),
+    "sweep": dict(width=2, gens=100, n_seeds=1,
+                  dedup_width=6, dedup_gens=30, dedup_n_n=300),
     "results": dict(n_runs=512, gens=128, chunk=64),
 }
 

@@ -1,0 +1,105 @@
+"""Phenotype-keyed evaluation cache (DESIGN.md §8).
+
+CGP point mutation is mostly neutral, so a large fraction of every
+(chunk × λ) population shares an identical active subgraph with its parent
+or a sibling — yet the batched engine used to re-simulate every copy against
+the whole 2^(2w) input cube each generation.  This module holds the
+host-side LRU behind the dedup evaluation path (``core.sweep``):
+
+  * keys are ``(phenotype digest, grid fingerprint, gauss_sigma)`` tuples —
+    the digest identifies the active subgraph (``genome.phenotype_digests``),
+    the fingerprint pins the problem (golden circuit, cube, metric budget)
+    and σ pins the Gauss-histogram bin edges, so an entry can never leak
+    across problems or σ-groups;
+  * values are the phenotype-invariant projection of a candidate evaluation:
+    the finalized ``(metric_vec, power)`` pair.  Raw popcounts / per-wire
+    signal probabilities are deliberately NOT cached — they are indexed by
+    raw node position, which differs between genotypes of one phenotype;
+    the activity-masked power scalar is identical for all of them
+    (inactive positions contribute exactly 0.0 to the float32 sums in
+    ``power.circuit_cost_from_probs``, and the active terms appear in the
+    same topological order), which is what makes the scatter bit-exact;
+  * the size bound is entry-count based (one entry ≈ digest + 8 float32s,
+    so the default 65536 bound stays in the low MB) with strict
+    least-recently-used eviction, and every lookup/insert/evict is counted
+    so the sweep can report a measured hit rate (``CacheStats``).
+
+The cache is execution-state only: it never changes results (bit-identity
+with the uncached path is differentially tested), so dropping, bounding or
+clearing it is always safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Hashable
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Counters of one dedup-cache lifetime (one sweep call).
+
+    ``candidates`` counts every offspring the dedup path saw; ``evaluated``
+    counts the unique phenotypes that actually reached the kernel.  The
+    headline ``hit_rate`` is the fraction of candidate evaluations avoided —
+    by a cross-generation LRU hit OR by a within-generation duplicate.
+    """
+    candidates: int = 0     # offspring seen by the dedup path
+    evaluated: int = 0      # unique phenotypes dispatched to the kernel
+    lru_hits: int = 0       # avoided by a cross-generation cache entry
+    dup_hits: int = 0       # avoided by a duplicate inside one generation
+    inserts: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        if self.candidates == 0:
+            return 0.0
+        return 1.0 - self.evaluated / self.candidates
+
+    def as_dict(self) -> dict:
+        return {
+            "candidates": self.candidates,
+            "evaluated": self.evaluated,
+            "lru_hits": self.lru_hits,
+            "dup_hits": self.dup_hits,
+            "inserts": self.inserts,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }
+
+
+class PhenotypeLRU:
+    """Bounded host-side LRU over phenotype-keyed evaluation results."""
+
+    def __init__(self, max_entries: int = 1 << 16):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self.max_entries = int(max_entries)
+        self._store: OrderedDict[Hashable, object] = OrderedDict()
+        self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._store
+
+    def get(self, key: Hashable):
+        """Value for ``key`` (refreshed to most-recently-used) or None."""
+        val = self._store.get(key)
+        if val is not None:
+            self._store.move_to_end(key)
+        return val
+
+    def put(self, key: Hashable, value) -> None:
+        if key in self._store:
+            self._store.move_to_end(key)
+        self._store[key] = value
+        self.stats.inserts += 1
+        while len(self._store) > self.max_entries:
+            self._store.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._store.clear()

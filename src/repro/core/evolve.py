@@ -60,6 +60,16 @@ class EvolveConfig:
     # is deliberately NOT part of the sweep grid fingerprint (checkpoints /
     # result shards resume across layout changes).  Ignored by backend="jnp".
     layout: str = "auto"
+    # Phenotype-dedup evaluation cache (DESIGN.md §8): the batched sweep
+    # engine canonicalizes+hashes each offspring's active subgraph, skips
+    # the kernel for phenotypes already seen (within the generation or in
+    # the cross-generation LRU) and scatters the cached result back.  Like
+    # ``layout`` this is a pure execution knob — results are bit-identical
+    # with the cache on or off, so it is NOT part of the grid fingerprint
+    # and checkpoints/shards resume across the setting.  Honored by
+    # ``core.sweep.run_sweep_batched`` (the serial ``evolve`` path and
+    # model-axis-sharded dispatches ignore it).
+    dedup: bool = False
 
 
 class EvalResult(NamedTuple):
@@ -97,7 +107,8 @@ def _eval_jnp(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
     """Pure-jnp evaluation over (a slice of) the input cube."""
     wires = simulate.simulate_planes(genome, spec, in_planes)
     cand_vals = simulate.unpack_values(wires[genome.outs])
-    partials = M.error_partials(golden_vals, cand_vals, gauss_sigma)
+    partials = M.error_partials(golden_vals, cand_vals, gauss_sigma,
+                                n_bits=spec.n_o)
     pop = jax.lax.population_count(
         wires[spec.n_i:].view(jnp.uint32)).astype(jnp.float32).sum(axis=-1)
     if axis_name is not None:
@@ -196,7 +207,6 @@ def _select(state: EvolveState, offspring: Genome, fits: jax.Array,
 
 
 def make_generation_step(spec: CGPSpec, cfg: EvolveConfig,
-                         golden_power: jax.Array,
                          axis_name: str | None = None,
                          island_axis: str | None = None):
     """Build the jit-able one-generation function.
@@ -255,7 +265,6 @@ def init_state(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
 
 
 def make_batched_generation_step(spec: CGPSpec, cfg: EvolveConfig,
-                                 golden_power: jax.Array,
                                  axis_name: str | None = None):
     """Run-batched one-generation function for the batched sweep engine.
 
@@ -320,6 +329,72 @@ def init_state_batched(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                        parent, fit, keys)
 
 
+# --------------------------------------------------------------------------
+# Dedup-path jit segments (DESIGN.md §8)
+# --------------------------------------------------------------------------
+#
+# The phenotype-dedup sweep path (``core.sweep``) cannot run the generation
+# loop as one ``lax.scan``: the dedup decision (which offspring share an
+# active subgraph, which phenotypes are already cached) is host-side Python
+# between kernel dispatches.  The loop is therefore split into three jit'd
+# segments per generation — mutate, evaluate-uniques, select — that together
+# perform EXACTLY the computation of ``make_batched_generation_step``'s one
+# fused step (same PRNG splits, same op order), so results stay bit-identical
+# to the scanned path with the cache on or off.
+
+@functools.partial(jax.jit, static_argnames=("spec", "cfg"))
+def mutate_segment(spec: CGPSpec, cfg: EvolveConfig, state: EvolveState
+                   ) -> tuple[jax.Array, Genome]:
+    """Per-run PRNG split + λ offspring; the batched step's first half.
+
+    Returns (next keys (C, 2), offspring with leading (C, λ)).
+    """
+    keys = jax.vmap(jax.random.split)(state.key)        # (C, 2, 2)
+    offspring = jax.vmap(
+        lambda k, p: mutate_population(k, p, spec, cfg.lam,
+                                       cfg.mutation_rate))(keys[:, 1],
+                                                           state.parent)
+    return keys[:, 0], offspring
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "cfg"))
+def eval_segment(spec: CGPSpec, cfg: EvolveConfig, nodes: jax.Array,
+                 outs: jax.Array, in_planes: jax.Array,
+                 golden_vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Population evaluation of a (U,)-stacked unique-phenotype batch.
+
+    Returns the phenotype-invariant projection the dedup cache stores:
+    (metric_vec (U, N_METRICS), power (U,)).  Traced once per padded batch
+    size U (the dedup driver pads to power-of-two buckets to bound
+    retraces).
+    """
+    res = get_population_eval(cfg.backend)(
+        Genome(nodes, outs), spec, in_planes, golden_vals, cfg.gauss_sigma,
+        None, cfg.layout)
+    return res.metric_vec, res.cost.power
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "cfg"))
+def select_segment(spec: CGPSpec, cfg: EvolveConfig, state: EvolveState,
+                   key: jax.Array, offspring: Genome, metric_vec: jax.Array,
+                   power: jax.Array, thr_mat: jax.Array,
+                   golden_power: jax.Array):
+    """Fitness + (1+λ) selection; the batched step's second half.
+
+    ``metric_vec``/``power`` carry leading (C, λ) — gathered from the dedup
+    cache.  Emits the same per-generation history row ``scan_generations``
+    traces, so the host loop can assemble bit-identical histories.
+    """
+    fits = jax.vmap(lambda p, m, t: jax.vmap(fitness_fn)(
+        p, m, jnp.broadcast_to(t, (cfg.lam,) + t.shape)))(
+            power, metric_vec, thr_mat)
+    state = jax.vmap(_select)(state._replace(key=key), offspring, fits,
+                              metric_vec, power)
+    out = (state.parent_power / golden_power, state.parent_metrics,
+           state.parent_fit)
+    return state, out
+
+
 def scan_generations(step, state0: EvolveState, thresholds: jax.Array,
                      in_planes: jax.Array, golden_vals: jax.Array,
                      golden_power: jax.Array, generations: int):
@@ -345,7 +420,7 @@ def evolve(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
            golden_vals: jax.Array, golden_power: jax.Array,
            key: jax.Array) -> EvolveResult:
     """Single-island paper-faithful run (jit; scan over generations)."""
-    step = make_generation_step(spec, cfg, golden_power)
+    step = make_generation_step(spec, cfg)
     state0 = init_state(spec, cfg, golden, thresholds, in_planes, golden_vals,
                         key)
     state, (hp, hm, hf) = scan_generations(step, state0, thresholds,
@@ -404,8 +479,7 @@ def evolve_sharded(mesh, spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
     def island_run(thresholds, key, in_planes, golden_vals):
         # runs on ONE (pod, data, model) shard; model axis splits the cube
         thresholds = thresholds[0]  # local shard is (1, N_METRICS)
-        step = make_generation_step(spec, cfg, golden_power,
-                                    axis_name=model_axis,
+        step = make_generation_step(spec, cfg, axis_name=model_axis,
                                     island_axis=data_axis)
         state0 = init_state(spec, cfg, golden, thresholds, in_planes,
                             golden_vals, key[0], axis_name=model_axis)

@@ -15,6 +15,7 @@ All functions here are jit/vmap-safe unless suffixed ``_np``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -135,6 +136,128 @@ def critical_path_ps(genome: Genome, spec: CGPSpec) -> jax.Array:
 
     depth, _ = jax.lax.scan(step, depth0, jnp.arange(spec.n_n))
     return jnp.max(depth[genome.outs])
+
+
+# --------------------------------------------------------------------------
+# Canonical phenotype form (DESIGN.md §8)
+# --------------------------------------------------------------------------
+#
+# The paper's CGP encoding is deliberately redundant: most of the 400 nodes
+# are inactive, so many genotypes share one *phenotype* — the subgraph of
+# active nodes actually reachable from the primary outputs.  Everything a
+# candidate evaluation returns (error metrics AND the activity-masked
+# power/area model) is a function of that subgraph alone, which makes the
+# canonical form below a sound cache key for evaluation results:
+#
+#   * active nodes are COMPACTED to the front of the node array in their
+#     original (= topological: fan-ins always point backwards) order and
+#     every fan-in / output gene is renumbered accordingly;
+#   * the unused second fan-in of a one-input gate is zeroed (it never
+#     affects simulation, but would otherwise split identical phenotypes);
+#   * inactive genes are dropped entirely (the tail of the canonical array
+#     is zero and excluded from the digest).
+#
+# Two genotypes map to the same canonical form iff their active subgraphs
+# are gate-for-gate identical (commutative input swaps are deliberately NOT
+# folded — a swapped gate is a different, if equivalent, subgraph).  The
+# digest is a 16-byte BLAKE2b over the canonical genes, so accidental
+# collisions are vanishingly unlikely (~2^-64 at billions of entries).
+
+PHENOTYPE_DIGEST_SIZE = 16  # bytes of BLAKE2b digest per phenotype
+
+
+def active_mask_np(nodes: np.ndarray, outs: np.ndarray,
+                   spec: CGPSpec) -> np.ndarray:
+    """Batched host-side active mask: (R, n_wires) bool.
+
+    NumPy twin of ``active_mask`` for the dedup cache's host-side
+    canonicalization (one reverse sweep, vectorized over the population).
+    """
+    nodes = np.asarray(nodes)
+    outs = np.asarray(outs)
+    R = nodes.shape[0]
+    n_i = spec.n_i
+    one_input = gates.ONE_INPUT
+    act = np.zeros((R, spec.n_wires), dtype=bool)
+    act[np.arange(R)[:, None], outs] = True
+    rows = np.arange(R)
+    for k in range(spec.n_n - 1, -1, -1):
+        is_act = act[:, n_i + k]
+        uses_b = is_act & (one_input[nodes[:, k, 2]] == 0)
+        act[rows, nodes[:, k, 0]] |= is_act
+        act[rows, nodes[:, k, 1]] |= uses_b
+    return act
+
+
+def canonicalize_phenotypes_np(nodes: np.ndarray, outs: np.ndarray,
+                               spec: CGPSpec
+                               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Canonical active-subgraph form of a stacked population.
+
+    Args:
+      nodes: (R, n_n, 3) int32; outs: (R, n_o) int32 (host arrays).
+
+    Returns:
+      (canon_nodes (R, n_n, 3), canon_outs (R, n_o), n_active (R,)) — per
+      genome, the first ``n_active[r]`` rows of ``canon_nodes[r]`` hold the
+      active subgraph in topological order with renumbered fan-ins and
+      zeroed unary second fan-ins; the tail rows are zero.
+    """
+    nodes = np.asarray(nodes)
+    outs = np.asarray(outs)
+    R = nodes.shape[0]
+    n_i, n_n = spec.n_i, spec.n_n
+    act = active_mask_np(nodes, outs, spec)
+    node_act = act[:, n_i:]                       # (R, n_n)
+    new_idx = np.cumsum(node_act, axis=1, dtype=np.int32) - 1
+    n_active = node_act.sum(axis=1).astype(np.int32)
+
+    def remap(w):  # wire index -> canonical wire index, rows aligned
+        node_ref = w >= n_i
+        k = np.clip(w - n_i, 0, n_n - 1)
+        return np.where(node_ref,
+                        n_i + np.take_along_axis(new_idx, k, axis=1), w)
+
+    func = nodes[:, :, 2]
+    unary = gates.ONE_INPUT[func] == 1
+    m0 = remap(nodes[:, :, 0])
+    m1 = remap(np.where(unary, 0, nodes[:, :, 1]))
+
+    canon = np.zeros((R, n_n, 3), np.int32)
+    r_idx, k_idx = np.nonzero(node_act)
+    pos = new_idx[r_idx, k_idx]
+    canon[r_idx, pos, 0] = m0[r_idx, k_idx]
+    canon[r_idx, pos, 1] = m1[r_idx, k_idx]
+    canon[r_idx, pos, 2] = func[r_idx, k_idx]
+    canon_outs = remap(outs).astype(np.int32)
+    return canon, canon_outs, n_active
+
+
+def phenotype_digests(nodes: np.ndarray, outs: np.ndarray,
+                      spec: CGPSpec) -> list[bytes]:
+    """Stable per-genome phenotype digests of a stacked population.
+
+    Identical for genotypes with the same active subgraph; used as the
+    dedup-cache key (``core.evalcache``).  Host-side by design — the dedup
+    path runs between jit segments (DESIGN.md §8).
+    """
+    canon, canon_outs, n_active = canonicalize_phenotypes_np(nodes, outs,
+                                                             spec)
+    digests = []
+    for r in range(canon.shape[0]):
+        na = int(n_active[r])
+        h = hashlib.blake2b(digest_size=PHENOTYPE_DIGEST_SIZE)
+        h.update(na.to_bytes(4, "little"))
+        h.update(canon[r, :na].tobytes())
+        h.update(canon_outs[r].tobytes())
+        digests.append(h.digest())
+    return digests
+
+
+def phenotype_digest(genome: Genome, spec: CGPSpec) -> bytes:
+    """Single-genome convenience wrapper around ``phenotype_digests``."""
+    return phenotype_digests(np.asarray(genome.nodes)[None],
+                             np.asarray(genome.outs)[None], spec)[0]
 
 
 def genome_to_flat(genome: Genome) -> jax.Array:

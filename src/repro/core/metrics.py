@@ -27,12 +27,17 @@ class MetricPartials(NamedTuple):
     """Shard-combinable raw sums.  Combine: add all but wce_max (max).
 
     x64 is disabled (the LM substrate must stay 32-bit), so magnitude sums
-    use an EXACT split accumulation: |e| = 256*hi + lo with hi/lo ≤ 2^8-1;
-    partial sums of 2^16 byte-sized terms stay < 2^24 and are exact in
+    use an EXACT accumulation (``_exact_sum``) with two statically-chosen
+    regimes.  Historic byte split: |e| = 256*hi + lo with hi/lo ≤ 2^8-1;
+    partial sums of ≤2^16 byte-sized terms stay < 2^24 and are exact in
     float32; the recombination ``256*hi_sum + lo_sum`` is done in float32
-    whose error is ≤ 1 ulp of the total (relative ~6e-8) — documented
-    precision of the metric pipeline (tests assert rtol 1e-5 vs the int64
-    NumPy oracle).
+    whose error is ≤ 1 ulp of the total (relative ~6e-8).  Outside that
+    regime (operands wider than 16 bits or slices longer than 2^16, where
+    the byte split would silently overflow 2^24) the sum switches to per-bit
+    popcounts — int32-exact counts recombined in float32 with error
+    ≤ n_bits ulp (relative ~n_bits·2^-24) — documented precision of the
+    metric pipeline (tests assert rtol 1e-5 vs the int64 NumPy oracle up to
+    width-12 value ranges).
     """
     abs_sum: jax.Array    # Σ |g - c|  (float32 via exact split sums)
     wce_max: jax.Array    # max |g - c|
@@ -60,12 +65,15 @@ def gauss_bin_mass(sigma: float, n_side: int = 4) -> np.ndarray:
 
 
 def error_partials(golden: jax.Array, cand: jax.Array,
-                   gauss_sigma: float, n_gauss_side: int = 4) -> MetricPartials:
+                   gauss_sigma: float, n_gauss_side: int = 4,
+                   n_bits: int = 16) -> MetricPartials:
     """Raw per-slice sums from integer output values.
 
     Args:
       golden, cand: (S,) int32 exact / approximate outputs on this cube slice.
       gauss_sigma:  σ for the Gauss_σ histogram (static).
+      n_bits:       static bound |g - c| < 2^n_bits (= the circuit's n_o);
+                    picks the exact-sum regime (see ``_exact_sum``).
     """
     g = golden.astype(jnp.int32)
     c = cand.astype(jnp.int32)
@@ -80,24 +88,46 @@ def error_partials(golden: jax.Array, cand: jax.Array,
         nz.astype(jnp.int32))
 
     return MetricPartials(
-        abs_sum=_exact_sum(ad),
+        abs_sum=_exact_sum(ad, n_bits),
         wce_max=ad.max(),
         err_count=nz.sum(),
         rel_sum=(ad.astype(jnp.float32) /
                  jnp.maximum(g, 1).astype(jnp.float32)).sum(),
-        sgn_sum=_exact_sum(jnp.maximum(diff, 0)) -
-                _exact_sum(jnp.maximum(-diff, 0)),
+        sgn_sum=_exact_sum(jnp.maximum(diff, 0), n_bits) -
+                _exact_sum(jnp.maximum(-diff, 0), n_bits),
         acc0_bad=((g == 0) & (c != 0)).sum(),
         hist=hist,
         count=jnp.asarray(diff.shape[0], jnp.int32),
     )
 
 
-def _exact_sum(v: jax.Array) -> jax.Array:
-    """Overflow-safe Σv for 0 ≤ v < 2^24 int32 (see MetricPartials doc)."""
-    hi = (v >> 8).astype(jnp.float32)
-    lo = (v & 0xFF).astype(jnp.float32)
-    return 256.0 * hi.sum() + lo.sum()
+def _exact_sum(v: jax.Array, n_bits: int = 16) -> jax.Array:
+    """Integer-exact Σv for 0 ≤ v < 2^n_bits (see MetricPartials doc).
+
+    The regime is chosen STATICALLY from (n_bits, slice length), never from
+    values, so it is jit-stable:
+
+      * byte split (historic path) whenever both block sums provably stay
+        < 2^24 — exact, and bit-identical with the Pallas kernel's in-kernel
+        split accumulation for the ≤8-bit-operand cubes the kernel serves;
+      * per-bit popcount otherwise: cnt_b = #{v with bit b set} is exact in
+        int32 for any slice length (and float32-exact up to 2^24 terms);
+        recombining Σ 2^b·cnt_b in float32, ascending, bounds the error at
+        n_bits ulp of the total — vs the UNBOUNDED silent error the
+        overflowed byte split used to produce for >8-bit operands
+        (e.g. a 12×12 multiplier's n_o = 24).
+    """
+    n = int(np.prod(v.shape)) if v.shape else 1
+    hi_max = max((1 << max(n_bits - 8, 0)) - 1, 0)
+    if n * 255 < (1 << 24) and n * hi_max < (1 << 24):
+        hi = (v >> 8).astype(jnp.float32)
+        lo = (v & 0xFF).astype(jnp.float32)
+        return 256.0 * hi.sum() + lo.sum()
+    total = jnp.float32(0.0)
+    for b in range(n_bits):  # ascending: small terms accumulate first
+        cnt = ((v >> b) & 1).sum()
+        total = total + float(1 << b) * cnt.astype(jnp.float32)
+    return total
 
 
 def combine_partials(p: MetricPartials, axis_name: str) -> MetricPartials:
@@ -146,7 +176,7 @@ def finalize_metrics(p: MetricPartials, n_o: int, gauss_sigma: float,
 def metrics_from_values(golden: jax.Array, cand: jax.Array, n_o: int,
                         gauss_sigma: float = 256.0) -> jax.Array:
     """Single-shard convenience: values -> finalized metric vector."""
-    p = error_partials(golden, cand, gauss_sigma)
+    p = error_partials(golden, cand, gauss_sigma, n_bits=n_o)
     return finalize_metrics(p, n_o, gauss_sigma)
 
 

@@ -72,12 +72,14 @@ import numpy as np
 from repro.checkpoint import store
 from repro.core import metrics as M
 from repro.core import simulate
+from repro.core.evalcache import PhenotypeLRU
 from repro.core.results import (SweepResultReader, SweepResultWriter,
                                 normalize_history_mode)
-from repro.core.evolve import (EvolveConfig, init_state_batched,
-                               make_batched_generation_step, scan_generations)
+from repro.core.evolve import (EvolveConfig, eval_segment, init_state_batched,
+                               make_batched_generation_step, mutate_segment,
+                               scan_generations, select_segment)
 from repro.core.fitness import ConstraintSpec, feasible
-from repro.core.genome import CGPSpec, Genome
+from repro.core.genome import CGPSpec, Genome, phenotype_digests
 from repro.core.power import circuit_cost_from_probs
 
 
@@ -137,6 +139,18 @@ class SweepConfig:
     replicated.  Selection under MAE/WCE/ER/AVG/ACC0 constraints stays
     bit-identical to the unsharded dispatch (integer-exact partials); MRE
     sums are reassociated, so MRE-constrained runs are only allclose.
+
+    ``dedup`` overrides the phenotype-dedup evaluation cache for every chunk
+    of THIS sweep (``None`` defers to ``cfg.evolve.dedup``; DESIGN.md §8):
+    offspring sharing an active subgraph are evaluated once per generation,
+    and a cross-generation host LRU (``dedup_cache_size`` entries, keyed by
+    phenotype digest × grid fingerprint × σ) skips the kernel for phenotypes
+    it has already measured.  Execution-only like ``layout`` — results are
+    bit-identical with the cache on or off, the grid fingerprint ignores it,
+    and checkpoints/shards resume across the setting.  Measured hit/miss
+    counters come back on ``SweepResult.dedup_stats``.  Incompatible with
+    ``model_axis`` (the dedup loop is host-driven; a cube-sharded dispatch
+    is one fused program).
     """
     chunk_size: int = 32          # runs per jit'd batch (device-memory bound)
     checkpoint_dir: str | None = None
@@ -148,8 +162,13 @@ class SweepConfig:
     pod_index: int | None = None  # this process's pod (None: resolve via ctx)
     model_axis: str | None = None  # mesh axis to shard the input cube over
     layout: str | None = None     # Pallas grid-layout override (DESIGN.md §7)
+    dedup: bool | None = None     # phenotype-dedup cache override (§8)
+    dedup_cache_size: int = 1 << 16  # cross-generation LRU entry bound
 
     def __post_init__(self):
+        if self.dedup_cache_size < 1:
+            raise ValueError(f"dedup_cache_size must be >= 1, got "
+                             f"{self.dedup_cache_size}")
         if self.layout not in (None, "auto", "genome_major", "cube_major"):
             raise ValueError(
                 f"layout must be None, 'auto', 'genome_major' or "
@@ -208,6 +227,8 @@ class SweepResult:
     runs_per_sec: float                # throughput of this call (0 if resumed
                                        # with nothing left to do)
     results_dir: str | None = None     # shard spill location, if streaming
+    dedup_stats: dict | None = None    # phenotype-cache counters (§8), when
+                                       # the dedup path ran this call
 
     def reader(self) -> SweepResultReader:
         """Open the shard set this sweep streamed to (requires a
@@ -255,7 +276,7 @@ def evolve_chunk(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
     combine across the axis, so every shard holds the replicated global
     result (``_sharded_chunk_fn`` builds exactly that wrapper).
     """
-    batched_step = make_batched_generation_step(spec, cfg, golden_power,
+    batched_step = make_batched_generation_step(spec, cfg,
                                                 axis_name=axis_name)
     state0 = init_state_batched(spec, cfg, golden, thr_mat, in_planes,
                                 golden_vals, keys, axis_name=axis_name)
@@ -263,6 +284,89 @@ def evolve_chunk(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                                            in_planes, golden_vals,
                                            golden_power, cfg.generations)
     return state, hp.T, jnp.swapaxes(hm, 0, 1), hf.T
+
+
+_init_state_batched_jit = jax.jit(
+    init_state_batched, static_argnames=("spec", "cfg", "axis_name"))
+
+
+def _evolve_chunk_dedup(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
+                        thr_mat: jax.Array, in_planes: jax.Array,
+                        golden_vals: jax.Array, golden_power: jax.Array,
+                        keys: jax.Array, cache: PhenotypeLRU,
+                        scope: tuple):
+    """``evolve_chunk`` with the phenotype-dedup cache (DESIGN.md §8).
+
+    The generation loop runs on the host so the dedup decision can happen in
+    Python between jit segments: per generation, (1) ``mutate_segment``
+    draws the (C × λ) offspring with exactly the scanned path's PRNG
+    stream, (2) the offspring are canonicalized+hashed on the host and
+    reduced to unique *uncached* phenotypes, (3) ``eval_segment`` dispatches
+    only those (padded to a power-of-two bucket so jit retraces stay
+    logarithmic in the population size), (4) the cached/shared results are
+    scattered back to every copy and ``select_segment`` finishes the step.
+    Every evaluation result a copy receives is the phenotype-invariant
+    (metric_vec, power) projection (see ``core.evalcache``), so the returned
+    state and histories are bit-identical to ``evolve_chunk``'s.
+
+    ``scope`` pins the cache entries' validity (grid fingerprint, σ); the
+    LRU itself lives across chunks of one sweep call.
+    """
+    C, lam = thr_mat.shape[0], cfg.lam
+    state = _init_state_batched_jit(spec, cfg, golden, thr_mat, in_planes,
+                                    golden_vals, keys)
+    stats = cache.stats
+    hp, hm, hf = [], [], []
+    for _ in range(cfg.generations):
+        key, offspring = mutate_segment(spec, cfg, state)
+        nodes = np.asarray(offspring.nodes).reshape(C * lam, spec.n_n, 3)
+        outs = np.asarray(offspring.outs).reshape(C * lam, spec.n_o)
+        digests = phenotype_digests(nodes, outs, spec)
+        stats.candidates += len(digests)
+
+        first: dict[bytes, int] = {}
+        for i, d in enumerate(digests):
+            if d in first:
+                stats.dup_hits += 1
+            else:
+                first[d] = i
+        values: dict[bytes, tuple] = {}
+        miss_digests: list[bytes] = []
+        for d in first:
+            val = cache.get((d,) + scope)
+            if val is None:
+                miss_digests.append(d)
+            else:
+                stats.lru_hits += 1
+                values[d] = val
+        if miss_digests:
+            rows = [first[d] for d in miss_digests]
+            n_miss = len(rows)
+            stats.evaluated += n_miss
+            pad = 1 << (n_miss - 1).bit_length()  # bucketed jit shapes
+            sel = np.asarray(rows + rows[:1] * (pad - n_miss))
+            mv, pw = eval_segment(spec, cfg, jnp.asarray(nodes[sel]),
+                                  jnp.asarray(outs[sel]), in_planes,
+                                  golden_vals)
+            mv = np.asarray(mv)[:n_miss]
+            pw = np.asarray(pw)[:n_miss]
+            for j, d in enumerate(miss_digests):
+                values[d] = (mv[j], pw[j])
+                cache.put((d,) + scope, values[d])
+
+        mets = np.stack([values[d][0] for d in digests])
+        pows = np.asarray([values[d][1] for d in digests], np.float32)
+        state, (p_rel, p_met, p_fit) = select_segment(
+            spec, cfg, state, key, offspring,
+            jnp.asarray(mets.reshape(C, lam, M.N_METRICS)),
+            jnp.asarray(pows.reshape(C, lam)), thr_mat, golden_power)
+        hp.append(np.asarray(p_rel))
+        hm.append(np.asarray(p_met))
+        hf.append(np.asarray(p_fit))
+
+    gens_axis = 1  # run-major histories, like evolve_chunk's returns
+    return (state, np.stack(hp, axis=gens_axis),
+            np.stack(hm, axis=gens_axis), np.stack(hf, axis=gens_axis))
 
 
 @functools.lru_cache(maxsize=None)
@@ -457,6 +561,16 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         else:
             pod = 0
 
+    dedup = sweep.dedup if sweep.dedup is not None else cfg.evolve.dedup
+    if dedup and sweep.model_axis is not None:
+        # diagnosed before the mesh check: the incompatibility holds
+        # whether or not a mesh is active
+        raise ValueError(
+            "dedup is incompatible with model_axis: the dedup generation "
+            "loop is host-driven, a cube-sharded dispatch is one fused "
+            "program (DESIGN.md §8)")
+    cache = PhenotypeLRU(sweep.dedup_cache_size) if dedup else None
+
     if sweep.model_axis is not None:
         from repro.parallel import ctx
         mesh = ctx.get_mesh()
@@ -513,6 +627,10 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             state, hp, hm, hf = evolve_call(
                 gold.nodes, gold.outs, jnp.asarray(thr[sel]), in_planes,
                 gvals, gpower, jnp.asarray(keys[sel]))
+        elif dedup:
+            state, hp, hm, hf = _evolve_chunk_dedup(
+                spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
+                gpower, jnp.asarray(keys[sel]), cache, (fingerprint, sigma))
         else:
             state, hp, hm, hf = evolve_chunk(
                 spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
@@ -596,4 +714,5 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         n_runs=n_runs,
         runs_per_sec=(ran / dt) if ran else 0.0,
         results_dir=sweep.results_dir,
+        dedup_stats=cache.stats.as_dict() if cache is not None else None,
     )

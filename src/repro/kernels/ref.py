@@ -15,7 +15,8 @@ def cgp_eval_ref(genome: Genome, spec: CGPSpec, in_planes: jax.Array,
     """Oracle for kernels.cgp_sim: (metric partials, per-gate popcounts)."""
     wires = simulate.simulate_planes(genome, spec, in_planes)
     cand_vals = simulate.unpack_values(wires[genome.outs])
-    partials = M.error_partials(golden_vals, cand_vals, gauss_sigma)
+    partials = M.error_partials(golden_vals, cand_vals, gauss_sigma,
+                                n_bits=spec.n_o)
     pops = jax.lax.population_count(
         wires[spec.n_i:].view(jnp.uint32)).astype(jnp.float32).sum(axis=-1)
     return partials, pops

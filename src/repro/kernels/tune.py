@@ -80,28 +80,44 @@ def backend_key(interpret: bool) -> str:
     return jax.default_backend()
 
 
-_TABLE_CACHE: dict[str, tuple[float, dict]] = {}
+# path -> (stat token, parsed table or None-for-unparseable).  The token is
+# (st_mtime_ns, st_size, st_ino) rather than a bare mtime: a same-second
+# rewrite is invisible to 1s-granularity mtimes on some filesystems, but the
+# atomic-rename writes used here always change the inode (and usually the
+# size), so the token catches it.  Parse failures are cached under the same
+# token (value None) so a corrupt table isn't re-read and re-parsed on every
+# trace's ``resolve_variant`` call.
+_TABLE_CACHE: dict[str, tuple[tuple[int, int, int], dict | None]] = {}
+
+
+def _stat_token(path: str) -> tuple[int, int, int] | None:
+    try:
+        st = os.stat(path)
+    except OSError:
+        return None
+    return (st.st_mtime_ns, st.st_size, st.st_ino)
 
 
 def load_table(path: str | None = None) -> dict:
-    """Read the tuning table ({} if absent/invalid).  Cached by mtime so the
-    per-trace ``resolve_variant`` calls don't re-read the file."""
+    """Read the tuning table ({} if absent/invalid).  Cached by stat token so
+    the per-trace ``resolve_variant`` calls don't re-read the file."""
     path = path or table_path()
-    try:
-        mtime = os.path.getmtime(path)
-    except OSError:
+    token = _stat_token(path)
+    if token is None:
         return {}
     cached = _TABLE_CACHE.get(path)
-    if cached is not None and cached[0] == mtime:
-        return cached[1]
+    if cached is not None and cached[0] == token:
+        return cached[1] if cached[1] is not None else {}
     try:
         with open(path) as f:
             table = json.load(f)
     except (OSError, ValueError):
+        _TABLE_CACHE[path] = (token, None)  # negative-cache the parse failure
         return {}
     if not isinstance(table, dict) or "entries" not in table:
+        _TABLE_CACHE[path] = (token, None)
         return {}
-    _TABLE_CACHE[path] = (mtime, table)
+    _TABLE_CACHE[path] = (token, table)
     return table
 
 

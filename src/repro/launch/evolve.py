@@ -67,6 +67,15 @@ def main():
                          "scratch accumulators); auto resolves the measured "
                          "tuning table.  Results are bit-identical either "
                          "way")
+    ap.add_argument("--dedup", action="store_true",
+                    help="phenotype-dedup evaluation cache (DESIGN.md "
+                         "section 8): evaluate each unique active subgraph "
+                         "once per generation and reuse cached results "
+                         "across generations.  Execution-only — results are "
+                         "bit-identical with or without it")
+    ap.add_argument("--dedup-cache-size", type=int, default=1 << 16,
+                    help="entry bound of the cross-generation phenotype LRU "
+                         "(default: 65536)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="runs per jit'd batch of the sweep engine")
@@ -102,6 +111,8 @@ def main():
     if args.serial and args.pods > 1:
         ap.error("--serial is the single-process reference loop; it cannot "
                  "pod-shard the grid (drop --serial or --pods)")
+    if args.serial and args.dedup:
+        ap.error("--dedup lives in the batched sweep engine; drop --serial")
 
     cfg = SearchConfig(
         width=args.width, kind=args.kind, n_n=args.nodes,
@@ -122,13 +133,21 @@ def main():
                             checkpoint_dir=args.checkpoint_dir,
                             results_dir=args.results_dir,
                             keep_history=mode, layout=args.layout,
-                            n_pods=args.pods, pod_index=pod)
+                            n_pods=args.pods, pod_index=pod,
+                            dedup=args.dedup or None,
+                            dedup_cache_size=args.dedup_cache_size)
         result = run_sweep_batched(cfg, constraints, seeds=range(args.seeds),
                                    sweep=sweep)
         records = result.records
         tag = f"pod {pod}/{args.pods}: " if args.pods > 1 else ""
         print(f"[evolve] {tag}{result.completed}/{result.n_runs} runs "
               f"@ {result.runs_per_sec:.2f} runs/s", flush=True)
+        if args.dedup and result.dedup_stats is not None:
+            st = result.dedup_stats
+            print(f"[evolve] dedup cache: hit rate {st['hit_rate']:.1%} "
+                  f"({st['evaluated']}/{st['candidates']} candidates "
+                  f"evaluated, {st['lru_hits']} LRU hits, "
+                  f"{st['evictions']} evictions)", flush=True)
         if args.results_dir:
             reader = result.reader()
             print(f"[evolve] {len(reader.spans())} result shards "

@@ -64,8 +64,8 @@ def test_packed_sim_matches_numpy_oracle():
 
 # ----------------------------- metrics --------------------------------------
 
-@given(st.integers(0, 2**31 - 1), st.integers(2, 10))
-@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 24))
+@settings(max_examples=15, deadline=None)
 def test_metrics_match_numpy_oracle(seed, n_o):
     rng = np.random.default_rng(seed)
     n = 128
@@ -78,8 +78,30 @@ def test_metrics_match_numpy_oracle(seed, n_o):
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("n_o", [11, 20, 24])
+def test_metrics_oracle_wide_operands_long_slices(n_o):
+    """Width-10/12 value ranges on full-cube-sized slices: the regime where
+    the historic byte-split _exact_sum silently overflowed float32 (its
+    hi-column sums exceed 2^24) and the per-bit popcount path must take
+    over (metrics.py ``_exact_sum``)."""
+    rng = np.random.default_rng(n_o)
+    n = 1 << 16
+    hi = 1 << n_o
+    g = rng.integers(0, hi, n).astype(np.int32)
+    c = rng.integers(0, hi, n).astype(np.int32)
+    got = np.asarray(M.metrics_from_values(jnp.asarray(g), jnp.asarray(c),
+                                           n_o, gauss_sigma=256.0))
+    want = M.metrics_np(g, c, n_o, gauss_sigma=256.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # the raw sum itself: exact to <= n_bits ulp even at worst-case values
+    v = rng.integers(hi // 2, hi, n).astype(np.int32)
+    got_sum = float(M._exact_sum(jnp.asarray(v), n_o))
+    want_sum = float(v.astype(np.int64).sum())
+    assert abs(got_sum - want_sum) <= n_o * np.spacing(np.float32(want_sum))
+
+
 @given(st.integers(0, 2**31 - 1))
-@settings(max_examples=20, deadline=None)
+@settings(max_examples=10, deadline=None)
 def test_metric_invariants(seed):
     rng = np.random.default_rng(seed)
     g = rng.integers(0, 256, 64).astype(np.int32)

@@ -70,6 +70,7 @@ def test_acc0_constraint_is_maintained():
     assert rec.feasible and rec.metrics[M.ACC0] == 1.0
 
 
+@pytest.mark.kernel_diff
 def test_pallas_backend_matches_jnp_backend():
     cfg = SearchConfig(width=3, n_n=80,
                        evolve=EvolveConfig(generations=60, lam=3,

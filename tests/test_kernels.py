@@ -137,3 +137,81 @@ def test_flash_attention_dtypes(dtype):
         np.asarray(got, np.float32).reshape(2, 64, 16),
         np.asarray(want, np.float32),
         rtol=2e-2 if dtype == jnp.bfloat16 else 2e-5, atol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# Tuning-table cache staleness (kernels/tune.py): the stat-token cache must
+# never serve a stale table after a rewrite, including same-mtime rewrites,
+# and must not re-parse a corrupt table on every resolve call
+# --------------------------------------------------------------------------
+
+def _parse_counter(monkeypatch):
+    from repro.kernels import tune
+    calls = {"n": 0}
+    real = tune.json.load
+
+    def counting(f):
+        calls["n"] += 1
+        return real(f)
+
+    monkeypatch.setattr(tune.json, "load", counting)
+    return calls
+
+
+def test_tune_table_cached_by_stat_token(tmp_path, monkeypatch):
+    from repro.kernels import tune
+    path = str(tmp_path / "table.json")
+    tune.save_entry(2, 3, "cpu", {"layout": "cube_major"}, path)
+    calls = _parse_counter(monkeypatch)
+    first = tune.load_table(path)
+    assert calls["n"] == 1
+    assert tune.load_table(path) == first  # unchanged file: cache hit
+    assert calls["n"] == 1
+    assert first["entries"][tune.table_key(2, 3, "cpu")]["layout"] \
+        == "cube_major"
+
+
+def test_tune_table_same_mtime_rewrite_detected(tmp_path):
+    """An atomic rewrite landing in the same mtime instant must still be
+    picked up: the rename gives the file a new inode, which the stat token
+    (mtime_ns, size, inode) sees even when mtime and size are unchanged."""
+    import os
+
+    from repro.kernels import tune
+    path = str(tmp_path / "table.json")
+    tune.save_entry(2, 3, "cpu", {"layout": "genome_major"}, path)
+    assert tune.resolve_layout(2, 3, "cpu", path) == "genome_major"
+    st = os.stat(path)
+    # atomic rename into place (fresh inode), then pin the mtime back
+    tune.save_entry(2, 3, "cpu", {"layout": "cube_major"}, path)
+    os.utime(path, ns=(st.st_atime_ns, st.st_mtime_ns))
+    now = os.stat(path)
+    assert now.st_mtime_ns == st.st_mtime_ns  # the hostile case: mtime lies
+    assert tune.resolve_layout(2, 3, "cpu", path) == "cube_major"
+
+
+def test_tune_table_corrupt_is_negative_cached(tmp_path, monkeypatch):
+    from repro.kernels import tune
+    path = str(tmp_path / "table.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    calls = _parse_counter(monkeypatch)
+    assert tune.load_table(path) == {}
+    assert tune.load_table(path) == {}  # not re-parsed per call
+    assert calls["n"] == 1
+    assert tune.resolve_variant(2, 3, "cpu", path) == tune.KernelVariant()
+    assert calls["n"] == 1
+    # a valid rewrite (new token) recovers without any cache poking
+    tune.save_entry(2, 3, "cpu", {"layout": "cube_major"}, path)
+    assert tune.resolve_layout(2, 3, "cpu", path) == "cube_major"
+
+
+def test_tune_save_entry_invalidates_cache(tmp_path):
+    from repro.kernels import tune
+    path = str(tmp_path / "table.json")
+    tune.save_entry(2, 3, "cpu", {"layout": "genome_major"}, path)
+    assert tune.resolve_layout(2, 3, "cpu", path) == "genome_major"
+    tune.save_entry(2, 8, "cpu", {"layout": "cube_major"}, path)
+    table = tune.load_table(path)
+    assert set(table["entries"]) == {tune.table_key(2, 3, "cpu"),
+                                     tune.table_key(2, 8, "cpu")}

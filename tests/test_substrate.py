@@ -65,7 +65,7 @@ def test_prefetch_loader():
 @given(st.lists(st.lists(st.integers(0, 250), min_size=0, max_size=40),
                 min_size=1, max_size=10),
        st.integers(4, 32))
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=10, deadline=None)
 def test_pack_documents_preserves_stream(docs, seq_len):
     eos = 255
     out = pack_documents(docs, seq_len, eos)

@@ -53,6 +53,7 @@ def _assert_records_match(a, b, exact_genomes=True):
         assert ra.feasible == rb.feasible
 
 
+@pytest.mark.kernel_diff
 def test_batched_matches_serial_per_run(serial_records, batched_result):
     assert N_RUNS >= 12  # ISSUE acceptance: >= 6 configs x 2 seeds
     assert batched_result.completed == N_RUNS
@@ -67,6 +68,7 @@ def test_chunked_equals_unchunked(batched_result):
     np.testing.assert_array_equal(batched_result.hist_fit, chunked.hist_fit)
 
 
+@pytest.mark.kernel_diff
 def test_run_sweep_api_is_batched(serial_records):
     recs = run_sweep(CFG, CONSTRAINTS, SEEDS,
                      sweep=SweepConfig(chunk_size=7))
@@ -126,6 +128,7 @@ def test_resume_not_shadowed_by_other_grid_checkpoint(tmp_path):
     assert resumed.completed == 8 and resumed.done_mask.all()
 
 
+@pytest.mark.kernel_diff
 def test_sigma_interleaved_grid_matches_serial():
     """Sigma-heterogeneous grids execute sigma-grouped (one compiled program
     per sigma, no padding blowup) but must come back in grid order."""

@@ -23,6 +23,7 @@ def _run_cli(args, timeout=900):
     return out.stdout
 
 
+@pytest.mark.slow
 def test_end_to_end_evolve_deploy_train(tmp_path):
     """The paper's full story in miniature: evolve an approximate multiplier
     under combined constraints, deploy its LUT into a quantized matmul, and
@@ -67,6 +68,7 @@ def test_train_cli_loss_decreases(tmp_path):
     assert last < first, out
 
 
+@pytest.mark.slow
 def test_train_cli_resume_from_checkpoint(tmp_path):
     ck = str(tmp_path / "ck")
     _run_cli(["repro.launch.train", "--arch", "llama3_2_1b", "--reduced",

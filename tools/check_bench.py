@@ -12,7 +12,8 @@ Metric direction is inferred from the key, the same naming contract
 ``kernel_micro`` uses throughout:
 
   * lower-is-better: ``*_us_per_*``, ``*_ms`` — latency keys;
-  * higher-is-better: ``*_per_s*``, ``*_speedup`` — throughput/ratio keys;
+  * higher-is-better: ``*_per_s*``, ``*_speedup``, ``*_hit_rate`` —
+    throughput/ratio keys and cache effectiveness;
   * everything else (``n_runs``, ``row_kb``, the ``_meta`` block) is shape
     metadata and ignored.
 
@@ -66,7 +67,8 @@ def direction(key: str) -> str | None:
     leaf = key.rsplit(".", 1)[-1]
     if "_us_per_" in leaf or leaf.endswith("_ms"):
         return "down"
-    if "_per_s" in leaf or leaf.endswith("_speedup"):
+    if ("_per_s" in leaf or leaf.endswith("_speedup")
+            or leaf.endswith("_hit_rate")):
         return "up"
     return None
 
