@@ -120,7 +120,9 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
                 n_seeds: int = 2, backends: tuple = ("jnp", "pallas"),
                 layouts: tuple = ("genome_major", "cube_major"),
                 dedup_width: int = 6, dedup_gens: int = 60,
-                dedup_n_n: int = 300, dedup_mutation_rate: float = 0.0005):
+                dedup_n_n: int = 300, dedup_mutation_rate: float = 0.0005,
+                sampled_width: int = 12, sampled_gens: int = 20,
+                sampled_size: int = 1 << 13):
     """Constraint-grid throughput (runs/s): batched engine vs serial loop,
     with a ``backend`` axis over the candidate-evaluation path and — for
     the pallas backend — a ``layout`` axis over the evaluation-grid order
@@ -140,6 +142,14 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
     with their parent and the cache's skipped kernel dispatches dominate its
     host-side hashing cost.  Emits cached vs uncached effective runs/s and
     the measured cache hit rate.
+
+    The ``sampled_*`` leg times ``eval_mode="sampled"`` (DESIGN.md §9) past
+    the exhaustive wall: a width-``sampled_width`` multiplier grid whose
+    2^(2w) cube (16.7M rows at width 12) no evolve loop could afford,
+    evaluated on a ``sampled_size``-row uniform sample instead.  Runs on the
+    jnp backend — the Pallas byte-split ``_exact_sum`` regime is not exact
+    at n_o = 24 (DESIGN.md §9).  Emits ``sampled_runs_per_s``, the key the
+    bench gate tracks.
     """
     import dataclasses
 
@@ -201,6 +211,24 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
             out["dedup_speedup"] = (out["dedup_runs_per_s"]
                                     / out["dedup_off_runs_per_s"])
             out["dedup_hit_rate"] = res.dedup_stats["hit_rate"]
+
+    # --- sampled-eval leg (DESIGN.md §9): width past the exhaustive wall --
+    _, spec_s = G.array_multiplier(sampled_width, n_n=None)  # auto-sized
+    scfg = SearchConfig(
+        width=sampled_width, kind="mul", n_n=spec_s.n_n,
+        evolve=EvolveConfig(generations=sampled_gens, lam=lam,
+                            eval_mode="sampled", sample_size=sampled_size,
+                            input_dist="uniform"))
+    scons = cons[:2]  # one σ group: one trace for the leg
+    sn = len(scons) * len(seeds)
+    ssw = SweepConfig(chunk_size=sn, keep_history=False)
+    run_sweep_batched(scfg, scons, seeds, ssw)  # compile
+    t0 = time.perf_counter()
+    run_sweep_batched(scfg, scons, seeds, ssw)
+    t_s = time.perf_counter() - t0
+    out["sampled_runs_per_s"] = sn / t_s
+    out["sampled_inputs_per_s"] = (sn * sampled_gens * lam
+                                   * sampled_size / t_s)
     return out
 
 
@@ -232,6 +260,7 @@ def bench_results(n_runs: int = 2048, gens: int = 256, chunk: int = 128,
         "best_outs": rng.integers(0, 99, (n_runs, n_o), np.int32),
         "best_fit": rng.random(n_runs, np.float32),
         "metrics": rng.random((n_runs, M.N_METRICS), np.float32),
+        "metrics_stderr": rng.random((n_runs, M.N_METRICS), np.float32),
         "power_rel": rng.random(n_runs, np.float32),
         "feasible": rng.integers(0, 2, n_runs, np.uint8),
         "error_mean": rng.random(n_runs, np.float32),
@@ -284,7 +313,8 @@ SMOKE = {
     "gen": dict(width=6, gens=40, lam=4, n_n=200),
     "pallas": dict(width=5),
     "sweep": dict(width=2, gens=100, n_seeds=1,
-                  dedup_width=6, dedup_gens=30, dedup_n_n=300),
+                  dedup_width=6, dedup_gens=30, dedup_n_n=300,
+                  sampled_gens=5, sampled_size=2048),
     "results": dict(n_runs=512, gens=128, chunk=64),
 }
 

@@ -48,7 +48,9 @@ class CacheStats:
     evaluated: int = 0      # unique phenotypes dispatched to the kernel
     lru_hits: int = 0       # avoided by a cross-generation cache entry
     dup_hits: int = 0       # avoided by a duplicate inside one generation
-    inserts: int = 0
+    inserts: int = 0        # NEW keys stored (invariant: inserts ==
+                            # live entries + evictions)
+    overwrites: int = 0     # puts that replaced an existing key's value
     evictions: int = 0
 
     @property
@@ -64,6 +66,7 @@ class CacheStats:
             "lru_hits": self.lru_hits,
             "dup_hits": self.dup_hits,
             "inserts": self.inserts,
+            "overwrites": self.overwrites,
             "evictions": self.evictions,
             "hit_rate": self.hit_rate,
         }
@@ -95,8 +98,10 @@ class PhenotypeLRU:
     def put(self, key: Hashable, value) -> None:
         if key in self._store:
             self._store.move_to_end(key)
+            self.stats.overwrites += 1
+        else:
+            self.stats.inserts += 1
         self._store[key] = value
-        self.stats.inserts += 1
         while len(self._store) > self.max_entries:
             self._store.popitem(last=False)
             self.stats.evictions += 1

@@ -70,6 +70,33 @@ class EvolveConfig:
     # ``core.sweep.run_sweep_batched`` (the serial ``evolve`` path and
     # model-axis-sharded dispatches ignore it).
     dedup: bool = False
+    # Evaluation-input mode (DESIGN.md §9).  "exhaustive" scores candidates
+    # on the full 2^(2w) input cube (the historic default — bit-identical to
+    # the pre-§9 engine); "sampled" scores them on a deterministic
+    # ``sample_size``-row operand sample drawn from ``input_dist`` with the
+    # counter-based stream seeded by ``sample_seed`` (``core.sampling``).
+    # UNLIKE layout/dedup this is result-changing: it IS part of the sweep
+    # grid fingerprint and of the dedup cache scope (via the sample-stream
+    # fingerprint).  The evolve/sweep engine itself only consumes whatever
+    # (in_planes, golden_vals) it is handed — the mode picks which pair
+    # ``search.problem_arrays`` builds, so sample shards reuse the cube-shard
+    # psum/pmax contract unchanged.
+    eval_mode: str = "exhaustive"    # "exhaustive" | "sampled"
+    sample_size: int = 1 << 14       # rows (rounded up to pow2 words * 32)
+    input_dist: str = "uniform"      # "uniform" | "gaussian" | "empirical"
+    sample_seed: int = 0             # sample-stream seed (not the CGP seed)
+
+    def __post_init__(self):
+        if self.eval_mode not in ("exhaustive", "sampled"):
+            raise ValueError(f"eval_mode must be 'exhaustive' or 'sampled', "
+                             f"got {self.eval_mode!r}")
+        from repro.core.sampling import INPUT_DISTS
+        if self.input_dist not in INPUT_DISTS:
+            raise ValueError(f"input_dist must be one of {INPUT_DISTS}, "
+                             f"got {self.input_dist!r}")
+        if self.sample_size < 1:
+            raise ValueError(
+                f"sample_size must be >= 1, got {self.sample_size}")
 
 
 class EvalResult(NamedTuple):

@@ -60,7 +60,7 @@ import numpy as np
 from repro.checkpoint.store import atomic_save_npz, atomic_write_json
 from repro.core import metrics as M
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2  # v2: + metrics_stderr summary column (DESIGN.md §9)
 MANIFEST = "manifest.json"
 HISTORY_MODES = ("none", "summary", "full")
 _SHARD_RE = re.compile(r"^shard_(\d{8})_(\d{8})\.npz$")
@@ -77,6 +77,11 @@ SUMMARY_FIELDS = {
     "best_outs": (("n_o",), "int32"),
     "best_fit": ((), "float32"),
     "metrics": (("n_metrics",), "float32"),
+    # per-metric standard errors (DESIGN.md §9): zeros for exhaustive grids,
+    # CLT estimates for sampled ones.  Part of SCHEMA_VERSION 2 — pre-§9
+    # shard directories carry a different schema fingerprint and cannot be
+    # extended by this code (re-run the sweep to migrate).
+    "metrics_stderr": (("n_metrics",), "float32"),
     "power_rel": ((), "float32"),
     "feasible": ((), "uint8"),
     "error_mean": ((), "float32"),
@@ -473,7 +478,8 @@ class SweepResultReader:
         committed run — the same list ``search.run_sweep`` returns."""
         from repro.core.search import CircuitRecord
         s = self.summary(["parent_nodes", "parent_outs", "metrics",
-                          "power_rel", "feasible", "error_mean", "error_std"])
+                          "metrics_stderr", "power_rel", "feasible",
+                          "error_mean", "error_std"])
         grid = self.manifest["grid"]
         recs = []
         for i in np.flatnonzero(s["done_mask"]):
@@ -487,6 +493,7 @@ class SweepResultReader:
                 feasible=bool(s["feasible"][i]),
                 error_mean=float(s["error_mean"][i]),
                 error_std=float(s["error_std"][i]),
+                metrics_stderr=s["metrics_stderr"][i],
             ))
         return recs
 

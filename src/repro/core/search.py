@@ -43,14 +43,38 @@ class CircuitRecord:
     feasible: bool
     error_mean: float = 0.0      # signed error mean (Fig. 13 analyses)
     error_std: float = 0.0
+    # (N_METRICS,) standard errors of the final metrics (DESIGN.md §9):
+    # all-zero under eval_mode="exhaustive" (a census has no sampling
+    # error), CLT estimates from the sample second moments when sampled.
+    metrics_stderr: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(M.N_METRICS, np.float32))
 
 
 def problem_arrays(cfg: SearchConfig):
-    """(golden genome, spec, in_planes, golden values, golden power)."""
+    """(golden genome, spec, in_planes, golden values, golden power).
+
+    ``cfg.evolve.eval_mode`` picks the evaluation-input pair (DESIGN.md §9):
+    the exhaustive 2^(2w) cube (historic default, bit-identical arrays), or
+    a deterministic ``core.sampling`` operand sample packed into the same
+    bit-plane/golden-value contract — the ONE branch point of the sampled
+    mode; every consumer downstream is mode-agnostic.  The golden power
+    normalizer is measured on the same inputs as the candidates (under
+    sampling it becomes a sample estimate of the activity model, consistent
+    across the numerator and denominator of ``power_rel``).
+    """
     build = G.array_multiplier if cfg.kind == "mul" else G.ripple_carry_adder
     gold, spec = build(cfg.width, n_n=cfg.n_n)
-    in_planes = simulate.input_planes(spec.n_i)
-    gvals = jnp.asarray(G.golden_values(cfg.width, cfg.kind))
+    ecfg = cfg.evolve
+    if ecfg.eval_mode == "sampled":
+        from repro.core import sampling
+        planes_np, gvals_np = sampling.sample_problem(
+            cfg.width, cfg.kind, ecfg.sample_size, ecfg.input_dist,
+            ecfg.sample_seed)
+        in_planes = jnp.asarray(planes_np)
+        gvals = jnp.asarray(gvals_np)
+    else:
+        in_planes = simulate.input_planes(spec.n_i)
+        gvals = jnp.asarray(G.golden_values(cfg.width, cfg.kind))
     wires = simulate.simulate_planes(gold, spec, in_planes)
     probs = simulate.signal_probabilities(wires[spec.n_i:])
     gpower = circuit_cost_from_probs(gold, spec, probs).power
@@ -80,8 +104,13 @@ def characterize(genome: Genome, spec: CGPSpec, cfg: SearchConfig,
     """Full final measurement of an evolved circuit."""
     wires = simulate.simulate_planes(genome, spec, in_planes)
     cvals = simulate.unpack_values(wires[genome.outs])
-    met = M.metrics_from_values(gvals, cvals, spec.n_o,
-                                constraint.gauss_sigma)
+    partials = M.error_partials(gvals, cvals, constraint.gauss_sigma,
+                                n_bits=spec.n_o)
+    met = M.finalize_metrics(partials, spec.n_o, constraint.gauss_sigma)
+    if cfg.evolve.eval_mode == "sampled":
+        stderr = np.asarray(M.metric_stderr(partials, spec.n_o))
+    else:  # census: zero sampling error by construction
+        stderr = np.zeros(M.N_METRICS, np.float32)
     probs = simulate.signal_probabilities(wires[spec.n_i:])
     cost = circuit_cost_from_probs(genome, spec, probs)
     emean, estd = M.error_moments(gvals, cvals)
@@ -97,6 +126,7 @@ def characterize(genome: Genome, spec: CGPSpec, cfg: SearchConfig,
         feasible=bool(feas),
         error_mean=float(emean),
         error_std=float(estd),
+        metrics_stderr=stderr,
     )
 
 

@@ -215,6 +215,8 @@ class SweepResult:
     records: list                      # list[CircuitRecord], len == completed
     thresholds: np.ndarray             # (n_runs, N_METRICS)
     metrics: np.ndarray                # (n_runs, N_METRICS) final measurement
+    metrics_stderr: np.ndarray         # (n_runs, N_METRICS) per-metric SEs
+                                       # (zeros for exhaustive grids, §9)
     power_rel: np.ndarray              # (n_runs,)
     feasible: np.ndarray               # (n_runs,) bool
     best_fit: np.ndarray               # (n_runs,)
@@ -400,21 +402,34 @@ def _sharded_chunk_fn(mesh, model_axis: str, spec: CGPSpec,
     return jax.jit(fn)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "gauss_sigma"))
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "gauss_sigma", "sampled"))
 def characterize_chunk(spec: CGPSpec, gauss_sigma: float, nodes: jax.Array,
                        outs: jax.Array, thr_mat: jax.Array,
                        in_planes: jax.Array, golden_vals: jax.Array,
-                       golden_power: jax.Array):
-    """Vmapped final measurement (metrics + power/delay + error moments)."""
+                       golden_power: jax.Array, sampled: bool = False):
+    """Vmapped final measurement (metrics + power/delay + error moments).
+
+    ``sampled`` additionally turns the second-moment partials into per-metric
+    standard errors (DESIGN.md §9); exhaustive chunks report zeros (a census
+    has no sampling error) so the returned tuple shape is mode-invariant.
+    """
     def one(n, o, thr):
         g = Genome(n, o)
         wires = simulate.simulate_planes(g, spec, in_planes)
         cvals = simulate.unpack_values(wires[g.outs])
-        met = M.metrics_from_values(golden_vals, cvals, spec.n_o, gauss_sigma)
+        partials = M.error_partials(golden_vals, cvals, gauss_sigma,
+                                    n_bits=spec.n_o)
+        met = M.finalize_metrics(partials, spec.n_o, gauss_sigma)
+        if sampled:
+            sterr = M.metric_stderr(partials, spec.n_o)
+        else:
+            sterr = jnp.zeros((M.N_METRICS,), jnp.float32)
         probs = simulate.signal_probabilities(wires[spec.n_i:])
         cost = circuit_cost_from_probs(g, spec, probs)
         emean, estd = M.error_moments(golden_vals, cvals)
-        return met, cost.power / golden_power, feasible(met, thr), emean, estd
+        return (met, sterr, cost.power / golden_power, feasible(met, thr),
+                emean, estd)
 
     return jax.vmap(one)(nodes, outs, thr_mat)
 
@@ -465,6 +480,16 @@ def grid_fingerprint(cfg, grid, keep_history: str | bool) -> str:
             np.stack([con.thresholds() for con, _ in grid]).tobytes()
         ).hexdigest(),
     }
+    # eval_mode is RESULT-changing (unlike layout/dedup): sampled grids key
+    # on the full sample-stream identity so a checkpoint/shard set can never
+    # resume under different evaluation inputs.  Exhaustive grids omit the
+    # keys entirely — their fingerprints (and hence pre-§9 checkpoints)
+    # are unchanged.
+    if ecfg.eval_mode != "exhaustive":
+        from repro.core import sampling
+        ident["eval_mode"] = ecfg.eval_mode
+        ident["sample_stream"] = sampling.stream_fingerprint(
+            cfg.width, ecfg.sample_size, ecfg.input_dist, ecfg.sample_seed)
     return hashlib.sha256(json.dumps(ident, sort_keys=True,
                                      default=float).encode()).hexdigest()
 
@@ -480,6 +505,7 @@ def _alloc_buffers(spec: CGPSpec, n_runs: int, gens: int,
         "best_outs": np.zeros((n_runs, spec.n_o), np.int32),
         "best_fit": np.zeros((n_runs,), np.float32),
         "metrics": np.zeros((n_runs, M.N_METRICS), np.float32),
+        "metrics_stderr": np.zeros((n_runs, M.N_METRICS), np.float32),
         "power_rel": np.zeros((n_runs,), np.float32),
         "feasible": np.zeros((n_runs,), np.uint8),
         "error_mean": np.zeros((n_runs,), np.float32),
@@ -561,6 +587,17 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         else:
             pod = 0
 
+    sampled = cfg.evolve.eval_mode == "sampled"
+    # the dedup cache scope must pin WHICH inputs an entry was measured on:
+    # the sample-stream fingerprint joins (grid fingerprint, σ) for sampled
+    # grids (DESIGN.md §9); exhaustive scopes are unchanged.
+    sample_scope: tuple = ()
+    if sampled:
+        from repro.core import sampling
+        sample_scope = (sampling.stream_fingerprint(
+            cfg.width, cfg.evolve.sample_size, cfg.evolve.input_dist,
+            cfg.evolve.sample_seed),)
+
     dedup = sweep.dedup if sweep.dedup is not None else cfg.evolve.dedup
     if dedup and sweep.model_axis is not None:
         # diagnosed before the mesh check: the incompatibility holds
@@ -630,14 +667,16 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         elif dedup:
             state, hp, hm, hf = _evolve_chunk_dedup(
                 spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
-                gpower, jnp.asarray(keys[sel]), cache, (fingerprint, sigma))
+                gpower, jnp.asarray(keys[sel]), cache,
+                (fingerprint, sigma) + sample_scope)
         else:
             state, hp, hm, hf = evolve_chunk(
                 spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
                 gpower, jnp.asarray(keys[sel]))
-        met, prel, feas, emean, estd = characterize_chunk(
+        met, sterr, prel, feas, emean, estd = characterize_chunk(
             spec, sigma, state.parent.nodes, state.parent.outs,
-            jnp.asarray(thr[sel]), in_planes, gvals, gpower)
+            jnp.asarray(thr[sel]), in_planes, gvals, gpower,
+            sampled=sampled)
 
         chunk_rows = {
             "parent_nodes": np.asarray(state.parent.nodes)[:n],
@@ -646,6 +685,7 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             "best_outs": np.asarray(state.best.outs)[:n],
             "best_fit": np.asarray(state.best_fit)[:n],
             "metrics": np.asarray(met)[:n],
+            "metrics_stderr": np.asarray(sterr)[:n],
             "power_rel": np.asarray(prel)[:n],
             "feasible": np.asarray(feas)[:n].astype(np.uint8),
             "error_mean": np.asarray(emean)[:n],
@@ -697,12 +737,14 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             feasible=bool(bufs["feasible"][i]),
             error_mean=float(bufs["error_mean"][i]),
             error_std=float(bufs["error_std"][i]),
+            metrics_stderr=bufs["metrics_stderr"][i],
         ))
 
     return SweepResult(
         records=records,
         thresholds=thr,
         metrics=bufs["metrics"],
+        metrics_stderr=bufs["metrics_stderr"],
         power_rel=bufs["power_rel"],
         feasible=bufs["feasible"].astype(bool),
         best_fit=bufs["best_fit"],

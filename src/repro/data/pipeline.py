@@ -77,7 +77,13 @@ def batches(cfg: DataConfig, start_step: int = 0) -> Iterator[dict]:
 
 
 class PrefetchLoader:
-    """Background-thread prefetch over ``batches`` (depth-bounded queue)."""
+    """Background-thread prefetch over ``batches`` (depth-bounded queue).
+
+    ``close()`` stops the worker; a closed loader drains whatever was already
+    queued and then raises ``StopIteration`` — ``__next__`` must never block
+    forever on a queue nobody refills (the consumer polls with a timeout so a
+    concurrent ``close()`` is also observed, not just one issued before).
+    """
 
     def __init__(self, cfg: DataConfig, start_step: int = 0, depth: int = 2):
         self.cfg = cfg
@@ -100,7 +106,12 @@ class PrefetchLoader:
         return self
 
     def __next__(self) -> dict:
-        return self._q.get()
+        while True:
+            try:
+                return self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration
 
     def close(self):
         self._stop.set()

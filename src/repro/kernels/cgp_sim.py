@@ -71,10 +71,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import gates
 
-# sums vector layout (float32): exact split accumulation, see core.metrics
+# sums vector layout (float32): exact split accumulation, see core.metrics.
+# SQ_SUM/REL_SQ are appended second-moment rows (float32, variance estimators
+# for the sampled-eval confidence intervals, DESIGN.md §9) — appended LAST so
+# the historic row indices (and hence the exhaustive-path bit patterns of
+# every pre-existing row) are unchanged.
 ABS_HI, ABS_LO, ERR_CNT, REL_SUM, POS_HI, POS_LO, NEG_HI, NEG_LO, \
-    ACC0_BAD, COUNT = range(10)
-N_SUMS = 10
+    ACC0_BAD, COUNT, SQ_SUM, REL_SQ = range(12)
+N_SUMS = 12
 
 
 def _gate_eval(func: jax.Array, a: jax.Array, b: jax.Array,
@@ -153,12 +157,15 @@ def _sim_block_partials(nodes_ref, outs_ref, planes_ref, golden_ref, wires,
     upd = upd.at[ABS_HI].set(abs_hi).at[ABS_LO].set(abs_lo)
     upd = upd.at[POS_HI].set(pos_hi).at[POS_LO].set(pos_lo)
     upd = upd.at[NEG_HI].set(neg_hi).at[NEG_LO].set(neg_lo)
+    adf = ad.astype(jnp.float32)
+    relf = adf / jnp.maximum(g, 1).astype(jnp.float32)
     upd = upd.at[ERR_CNT].set(nz.astype(jnp.float32).sum())
-    upd = upd.at[REL_SUM].set(
-        (ad.astype(jnp.float32) / jnp.maximum(g, 1).astype(jnp.float32)).sum())
+    upd = upd.at[REL_SUM].set(relf.sum())
     upd = upd.at[ACC0_BAD].set(
         ((g == 0) & (vals != 0)).astype(jnp.float32).sum())
     upd = upd.at[COUNT].set(float(32) * bw)
+    upd = upd.at[SQ_SUM].set((adf * adf).sum())
+    upd = upd.at[REL_SQ].set((relf * relf).sum())
 
     # σ-wide histogram bins over ±n_side·σ (+2 tails); scatter-free: static
     # per-bin masked reductions (TPU-friendly, n_bins ~ 10)
@@ -402,7 +409,7 @@ def cgp_sim_metrics(nodes: jax.Array, outs: jax.Array, in_planes: jax.Array,
                     golden_vals: jax.Array, *, n_i: int, n_n: int, n_o: int,
                     gauss_sigma: float = 256.0, n_gauss_side: int = 4,
                     block_words: int = 512, interpret: bool = True):
-    """Per-genome wrapper.  Returns (sums(10,), wce(1,), hist, pops(n_n,)).
+    """Per-genome wrapper.  Returns (sums(N_SUMS,), wce(1,), hist, pops(n_n,)).
 
     in_planes: (n_i, W) int32; golden_vals: (W*32,) int32.  Delegates to the
     batched kernel with a singleton genome axis (``r_tile=1``: no pad rows),

@@ -60,6 +60,8 @@ def _partials_from_sums(sums: jax.Array, wce: jax.Array, hist: jax.Array
         acc0_bad=sums[..., C.ACC0_BAD].astype(jnp.int32),
         hist=hist.astype(jnp.int32),
         count=sums[..., C.COUNT].astype(jnp.int32),
+        sq_sum=sums[..., C.SQ_SUM],
+        rel_sq=sums[..., C.REL_SQ],
     )
 
 

@@ -76,6 +76,30 @@ def main():
     ap.add_argument("--dedup-cache-size", type=int, default=1 << 16,
                     help="entry bound of the cross-generation phenotype LRU "
                          "(default: 65536)")
+    ap.add_argument("--eval-mode", default="exhaustive",
+                    choices=["exhaustive", "sampled"],
+                    help="evaluation inputs (DESIGN.md section 9): "
+                         "'exhaustive' scores every candidate on the full "
+                         "2^(2w) cube (bit-identical to the historic "
+                         "engine); 'sampled' scores them on a deterministic "
+                         "--sample-size operand sample from --input-dist — "
+                         "the only tractable mode past width ~10-12, with "
+                         "per-metric standard errors reported")
+    ap.add_argument("--sample-size", type=int, default=1 << 14,
+                    help="rows per sample (eval-mode=sampled); rounded up "
+                         "to a power-of-two word count x 32 lanes "
+                         "(default: 16384)")
+    ap.add_argument("--input-dist", default="uniform",
+                    choices=["uniform", "gaussian", "empirical"],
+                    help="operand distribution of the sample (DESIGN.md "
+                         "section 9): uniform over [0, 2^w); gaussian "
+                         "centered mid-range (sigma = 2^w/6, clipped); or "
+                         "empirical — inverse-CDF draws from an activation "
+                         "histogram captured off the data pipeline")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="counter-based PRNG seed of the sample stream "
+                         "(deterministic + checkpoint-replayable; part of "
+                         "the grid fingerprint)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="runs per jit'd batch of the sweep engine")
@@ -117,7 +141,11 @@ def main():
     cfg = SearchConfig(
         width=args.width, kind=args.kind, n_n=args.nodes,
         evolve=EvolveConfig(generations=args.generations, lam=args.lam,
-                            backend=args.backend, layout=args.layout))
+                            backend=args.backend, layout=args.layout,
+                            eval_mode=args.eval_mode,
+                            sample_size=args.sample_size,
+                            input_dist=args.input_dist,
+                            sample_seed=args.sample_seed))
     constraints = [parse_constraint(c) for c in args.constraint]
     if args.serial:
         records = run_sweep_serial(cfg, constraints, seeds=range(args.seeds))
@@ -154,14 +182,19 @@ def main():
                   f"({reader.completed}/{reader.n_runs} runs, history mode "
                   f"{reader.keep_history!r}) -> {args.results_dir}",
                   flush=True)
+    metric_names = ("mae", "wce", "er", "mre", "avg", "acc0", "gauss")
     for r in records:
-        met = {n: round(float(v), 4) for n, v in
-               zip(("mae", "wce", "er", "mre", "avg", "acc0", "gauss"),
-                   r.metrics)}
-        print(json.dumps({"constraint": r.constraint, "seed": r.seed,
-                          "power_rel": round(r.power_rel, 4),
-                          "feasible": r.feasible, "metrics": met}),
-              flush=True)
+        met = {n: round(float(v), 4) for n, v in zip(metric_names, r.metrics)}
+        row = {"constraint": r.constraint, "seed": r.seed,
+               "power_rel": round(r.power_rel, 4),
+               "feasible": r.feasible, "metrics": met}
+        if args.eval_mode == "sampled":
+            # per-metric standard errors (DESIGN.md §9) — the ±1 SE interval
+            # downstream margin-aware thresholds consume
+            row["metrics_stderr"] = {
+                n: round(float(v), 6)
+                for n, v in zip(metric_names, r.metrics_stderr)}
+        print(json.dumps(row), flush=True)
     if args.out:
         save_library(records, args.out)
         print(f"[evolve] wrote {len(records)} circuits -> {args.out}")

@@ -120,6 +120,43 @@ def test_metrics_zero_for_identical():
     assert (m[:5] == 0).all() and m[M.ACC0] == 1 and m[M.GAUSS] == 1
 
 
+def test_finalize_metrics_empty_shard_no_nan():
+    """Regression (ISSUE 7): count == 0 (an empty sampled/ragged shard
+    partition) used to finalize to 0/0 = NaN vectors that poison fitness
+    comparisons (NaN compares false against every threshold)."""
+    p = M.error_partials(jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+                         16.0)
+    assert int(p.count) == 0
+    m = np.asarray(M.finalize_metrics(p, 8, 16.0))
+    assert np.isfinite(m).all()
+    assert (m[:5] == 0).all()           # all-zero sums / max(n, 1)
+    se = np.asarray(M.metric_stderr(p, 8))
+    assert np.isfinite(se).all() and (se == 0).all()
+
+
+def test_metrics_np_gauss_slack_matches_finalize():
+    """Regression (ISSUE 7): the NumPy oracle hard-coded gauss_slack = 1.0
+    while ``finalize_metrics`` accepts a slack parameter — differential
+    tests at non-default slack silently diverged.  The GAUSS verdict must
+    agree between oracle and jnp path across the slack range, and the
+    slack must actually flip the verdict somewhere."""
+    rng = np.random.default_rng(3)
+    g = rng.integers(0, 256, 512).astype(np.int32)
+    # concentrated small errors: violates a tight N(0, 4) envelope head-on
+    c = (g - rng.integers(1, 4, 512)).clip(0).astype(np.int32)
+    sigma = 4.0
+    verdicts = []
+    for slack in (0.5, 1.0, 10.0, 1e4):
+        p = M.error_partials(jnp.asarray(g), jnp.asarray(c), sigma)
+        got = np.asarray(M.finalize_metrics(p, 8, sigma, gauss_slack=slack))
+        want = M.metrics_np(g, c, 8, gauss_sigma=sigma, gauss_slack=slack)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"slack={slack}")
+        verdicts.append(got[M.GAUSS])
+    assert min(verdicts) == 0.0 and max(verdicts) == 1.0, \
+        "slack sweep must flip the GAUSS verdict"
+
+
 def test_acc0_detects_violation():
     g = np.zeros(64, dtype=np.int32)
     c = np.zeros(64, dtype=np.int32)

@@ -128,8 +128,28 @@ def test_lru_counters_and_hit_rate():
     assert CacheStats().hit_rate == 0.0
     d = st.as_dict()
     assert d["candidates"] == 10 and d["hit_rate"] == pytest.approx(0.7)
+    assert d["overwrites"] == 0
     with pytest.raises(ValueError):
         PhenotypeLRU(max_entries=0)
+
+
+def test_lru_overwrite_not_counted_as_insert():
+    """Regression (ISSUE 7): ``put`` on an existing key used to bump
+    ``inserts``, breaking the inserts == live entries + evictions
+    accounting the hit-rate reports are sanity-checked against."""
+    lru = PhenotypeLRU(max_entries=2)
+    lru.put("a", 1)
+    lru.put("a", 2)          # overwrite, NOT an insert
+    lru.put("b", 3)
+    lru.put("c", 4)          # evicts "a"
+    st = lru.stats
+    assert st.inserts == 3
+    assert st.overwrites == 1
+    assert st.evictions == 1
+    # counter consistency: every insert is either still live or was evicted
+    assert st.inserts == len(lru) + st.evictions
+    assert lru.get("c") == 4 and lru.get("a") is None
+    assert st.as_dict()["overwrites"] == 1
 
 
 # --------------------------------------------------------------------------

@@ -62,6 +62,23 @@ def test_prefetch_loader():
     assert (b1["tokens"] == synth_batch(cfg, 1)["tokens"]).all()
 
 
+def test_prefetch_loader_stops_after_close():
+    """Regression (ISSUE 7): ``__next__`` used to block forever on a closed
+    loader (worker stopped, queue drained).  A closed loader drains what was
+    already queued, then raises StopIteration instead of hanging."""
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2)
+    loader = PrefetchLoader(cfg, start_step=0)
+    first = next(loader)
+    assert (first["tokens"] == synth_batch(cfg, 0)["tokens"]).all()
+    loader.close()
+    t0 = time.monotonic()
+    drained = list(loader)  # terminates: StopIteration once the queue empties
+    assert time.monotonic() - t0 < 5.0
+    assert len(drained) <= 2  # at most the queue depth was buffered
+    with pytest.raises(StopIteration):
+        next(loader)
+
+
 @given(st.lists(st.lists(st.integers(0, 250), min_size=0, max_size=40),
                 min_size=1, max_size=10),
        st.integers(4, 32))

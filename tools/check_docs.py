@@ -34,8 +34,10 @@ SOURCE_DIRS = ["src", "benchmarks", "examples", "tests", "tools"]
 
 # top-level DESIGN.md sections that must exist (docstring references point
 # into these; §6 is the multi-host sweep surface, §7 the kernel-layout /
-# tuning surface, §8 the phenotype-dedup evaluation cache)
-REQUIRED_DESIGN_SECTIONS = ["§1", "§2", "§3", "§4", "§5", "§6", "§7", "§8"]
+# tuning surface, §8 the phenotype-dedup evaluation cache, §9 the sampled
+# evaluation mode)
+REQUIRED_DESIGN_SECTIONS = ["§1", "§2", "§3", "§4", "§5", "§6", "§7", "§8",
+                            "§9"]
 
 # argparse-bearing entry points that must answer --help (quickstart.py is
 # deliberately absent: it has no CLI and would run the full search)
@@ -57,7 +59,8 @@ ENTRY_POINTS = [
 # happens to pass them (the layout/tuning surface of DESIGN.md §7)
 REQUIRED_FLAGS = {
     ("-m", "repro.launch.evolve"): ["--layout", "--backend", "--dedup",
-                                    "--dedup-cache-size"],
+                                    "--dedup-cache-size", "--eval-mode",
+                                    "--sample-size", "--input-dist"],
     ("-m", "benchmarks.kernel_micro"): ["--layout", "--tune", "--json",
                                         "--smoke"],
     ("tools/check_bench.py",): ["--baseline", "--max-regression"],
