@@ -7,7 +7,8 @@ reference — its target is TPU, and interpret mode hides the HBM cube
 traffic the cube-major layout removes).
 
 Script / module mode (CWD-independent):
-  python -m benchmarks.kernel_micro [--only eval,gen,pallas,sweep,results]
+  python -m benchmarks.kernel_micro \
+      [--only eval,gen,pallas,sweep,results,certify]
       [--backend jnp,pallas] [--layout genome_major,cube_major]
       [--smoke] [--json BENCH_out.json]
 
@@ -263,6 +264,7 @@ def bench_results(n_runs: int = 2048, gens: int = 256, chunk: int = 128,
         "metrics_stderr": rng.random((n_runs, M.N_METRICS), np.float32),
         "power_rel": rng.random(n_runs, np.float32),
         "feasible": rng.integers(0, 2, n_runs, np.uint8),
+        "certified_mask": rng.integers(0, 2, n_runs, np.uint8),
         "error_mean": rng.random(n_runs, np.float32),
         "error_std": rng.random(n_runs, np.float32),
         "hist_power_rel": rng.random((n_runs, gens), np.float32),
@@ -306,6 +308,45 @@ def bench_results(n_runs: int = 2048, gens: int = 256, chunk: int = 128,
     }
 
 
+def bench_certify(width: int = 8, n_elites: int = 6, rate: float = 0.02,
+                  chunk_rows: int = 8192):
+    """Exact-verification escalation throughput (DESIGN.md §10).
+
+    Times ``certify.certified_metrics`` over mutated elites of the exact
+    golden netlist — the per-elite cost the sweep's escalation driver pays
+    when a sampled-feasible candidate is promoted to the exact tier.  Both
+    regimes at the same width so the numbers are comparable: the full-cube
+    dispatch (one jit'd pass over the whole 2^(2w) cube) and the chunked
+    bit-parallel pass forced via a small ``dispatch_rows`` budget (the
+    large-width path).
+    """
+    from repro.core import certify
+    from repro.core.mutate import mutate_population
+
+    gold, spec = G.array_multiplier(width, n_n=None)
+    pop = mutate_population(jax.random.PRNGKey(0), gold, spec, n_elites,
+                            rate)
+    nodes, outs = np.asarray(pop.nodes), np.asarray(pop.outs)
+
+    def run_all(dispatch_rows):
+        t0 = time.perf_counter()
+        for i in range(n_elites):
+            certify.certified_metrics(nodes[i], outs[i], spec, "mul", width,
+                                      256.0, dispatch_rows=dispatch_rows)
+        return time.perf_counter() - t0
+
+    for rows in (certify.DISPATCH_ROWS, chunk_rows):
+        certify.certified_metrics(nodes[0], outs[0], spec, "mul", width,
+                                  256.0, dispatch_rows=rows)  # compile
+    t_full = run_all(certify.DISPATCH_ROWS)
+    t_chunked = run_all(chunk_rows)
+    return {
+        "certify_escalations_per_s": n_elites / t_full,
+        "certify_rows_per_s": n_elites * (1 << spec.n_i) / t_full,
+        "certify_chunked_escalations_per_s": n_elites / t_chunked,
+    }
+
+
 # --smoke budget overrides per bench: the CI bench-gate size (seconds, not
 # minutes, per bench; small enough for every push, big enough to time)
 SMOKE = {
@@ -316,6 +357,7 @@ SMOKE = {
                   dedup_width=6, dedup_gens=30, dedup_n_n=300,
                   sampled_gens=5, sampled_size=2048),
     "results": dict(n_runs=512, gens=128, chunk=64),
+    "certify": dict(width=6, n_elites=4, chunk_rows=1024),
 }
 
 
@@ -353,7 +395,7 @@ def main(argv=None):
     import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: eval,gen,pallas,sweep,results")
+                    help="comma list: eval,gen,pallas,sweep,results,certify")
     ap.add_argument("--backend", default="jnp,pallas",
                     help="comma list of sweep-engine backends to time "
                          "(--only sweep axis; default: jnp,pallas)")
@@ -400,7 +442,8 @@ def main(argv=None):
                "pallas": bench_pallas_interpret,
                "sweep": functools.partial(bench_sweep, backends=backends,
                                           layouts=layouts),
-               "results": bench_results}
+               "results": bench_results,
+               "certify": bench_certify}
     if only is not None and (unknown := only - set(benches)):
         ap.error(f"unknown bench name(s): {sorted(unknown)} "
                  f"(choose from {sorted(benches)})")

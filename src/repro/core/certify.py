@@ -1,0 +1,238 @@
+"""Exact-verification escalation tier (DESIGN.md §10).
+
+Sampled evaluation (DESIGN.md §9) broke the 2^(2w) wall but cannot certify
+WCE/ACC0/GAUSS: a sample max is only a LOWER bound on the worst case, and
+the indicator metrics have no CLT interval (``metrics.metric_stderr``
+reports 0 for all three) — every width ≥ 11 sweep ships *estimates* where
+the paper's combined-constraint results require *guarantees*.  This module
+is the second evaluation tier that fixes that, following the paper's own
+follow-on work (PAPERS.md: arXiv 2003.02491 "Adaptive Verifiability-Driven
+Strategy", arXiv 2205.03267 "Optimization of BDD-based Approximation Error
+Metrics Calculations"): the population is screened with the cheap sampled
+kernel, and only constraint-surviving elites are escalated to an EXACT
+re-measurement, under an adaptive per-chunk budget (``CertifyPolicy``).
+
+Two exact regimes, chosen STATICALLY from the cube size (``certified_metrics``):
+
+  * **full-cube dispatch** — when the 2^(2w) cube fits one dispatch budget
+    (``dispatch_rows``), the candidate is re-simulated over the exhaustive
+    bit-plane cube in one jit'd pass and the materialized values are
+    finalized through ``metrics.metrics_np`` — bit-identical to the
+    exhaustive oracle by construction (the differential harness in
+    ``tests/test_certify.py`` pins this at widths ≤ 8).
+  * **chunked bit-parallel pass** — at larger widths the cube is streamed in
+    ``dispatch_rows``-row slices of packed operand planes (the same
+    ``(n_i, W)`` bit-plane contract the fused ``kernels/cgp_sim`` kernel
+    consumes) and each slice's partials are accumulated host-side in
+    int64/float64, combined per the ``MetricPartials`` shard contract
+    (sum every accumulator, max ``wce_max`` — DESIGN.md §6).  MAE, WCE, ER,
+    AVG, ACC0 and the Gauss histogram are integer-exact at ANY width and
+    chunking; MRE is a float64 sum whose chunk-order reassociation carries
+    the same documented caveat as model-axis cube shards.
+
+The escalation driver lives in ``core.sweep.run_sweep_batched`` (gated by
+``EvolveConfig.certify``); certified rows land in the results schema v3
+``certified_mask`` column and ``CircuitRecord.certified``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core import simulate
+from repro.core.fitness import _IS_LOWER_BOUND
+from repro.core.genome import CGPSpec, Genome
+
+#: default rows per exact dispatch: 2^20 rows keeps the live (n_wires, W)
+#: simulation state of a paper-scale genome around 100 MB and amortizes the
+#: per-dispatch overhead; widths ≤ 10 certify in ONE dispatch.
+DISPATCH_ROWS = 1 << 20
+
+#: metric indices a sampled estimate can NEVER certify: the sample max is a
+#: lower bound (WCE) and the indicators are verdicts about the full cube
+#: (ACC0, GAUSS) — exactly the positions ``metrics.metric_stderr`` zeroes.
+UNCERTIFIABLE = (M.WCE, M.ACC0, M.GAUSS)
+
+
+def requires_certification(thresholds) -> bool:
+    """True iff the combined constraint binds a metric a sample cannot
+    certify (WCE/ACC0/GAUSS — the ``metric_stderr = 0`` positions).
+
+    This is the stderr-misuse guard of DESIGN.md §10: a sampled run whose
+    constraint binds one of these metrics can satisfy it *on the sample*
+    but must NOT be treated as certified-feasible without an escalation to
+    the exact tier (``CircuitRecord.certified`` stays False otherwise).
+    """
+    t = np.asarray(thresholds)
+    hard = np.zeros(M.N_METRICS, dtype=bool)
+    hard[list(UNCERTIFIABLE)] = True
+    # a finite threshold is a binding constraint in both encodings: upper
+    # bounds are +inf when unconstrained, required booleans are -inf
+    return bool((np.isfinite(t) & hard).any())
+
+
+def feasible_np(metric_vec, thresholds) -> bool:
+    """Host-side Eq. (9) predicate — mirrors ``fitness.feasible`` bit-for-bit
+    (same lower-bound encoding for the boolean metrics)."""
+    m = np.asarray(metric_vec, dtype=np.float32)
+    t = np.asarray(thresholds, dtype=np.float32)
+    return bool(np.where(_IS_LOWER_BOUND, m >= t, m <= t).all())
+
+
+@dataclasses.dataclass(frozen=True)
+class CertifyPolicy:
+    """Adaptive escalation budget (arXiv 2003.02491).
+
+    Early sweep chunks churn through candidates that later chunks supersede,
+    so exact checks there are mostly wasted; as the sweep progresses the
+    budget ramps toward exact verification: chunk ``i`` of ``n`` may escalate
+    up to ``ceil(budget * (1 + ramp * i/(n-1)))`` elites.  ``ramp=1`` doubles
+    the cap by the final chunk; ``ramp=0`` is a flat per-chunk cap.  The
+    schedule is a pure function of the (deterministic, manifest-pinned)
+    chunk plan, so resumed and pod-sharded sweeps budget identically.
+    """
+    budget: int = 8                    # base escalations per chunk
+    ramp: float = 1.0                  # late-sweep budget growth factor
+    dispatch_rows: int = DISPATCH_ROWS  # rows per exact dispatch chunk
+
+    def __post_init__(self):
+        if self.budget < 1:
+            raise ValueError(f"budget must be >= 1, got {self.budget}")
+        if self.ramp < 0:
+            raise ValueError(f"ramp must be >= 0, got {self.ramp}")
+        if self.dispatch_rows < 32 or self.dispatch_rows % 32:
+            raise ValueError(f"dispatch_rows must be a positive multiple of "
+                             f"32, got {self.dispatch_rows}")
+
+    def chunk_budget(self, chunk_idx: int, n_chunks: int) -> int:
+        """Escalation cap of plan-chunk ``chunk_idx`` of ``n_chunks``."""
+        frac = chunk_idx / max(n_chunks - 1, 1)
+        return int(np.ceil(self.budget * (1.0 + self.ramp * frac)))
+
+
+def select_escalations(feasible_mask, power_rel, certified_mask,
+                       budget: int) -> np.ndarray:
+    """Rows to escalate this chunk: sampled-feasible, not yet certified,
+    best (lowest relative power — the circuits a feasible sweep would ship)
+    first, capped at ``budget``.  Stable order, so the selection is a pure
+    function of the chunk's measurements."""
+    feas = np.asarray(feasible_mask, dtype=bool)
+    done = np.asarray(certified_mask, dtype=bool)
+    elig = np.flatnonzero(feas & ~done)
+    order = elig[np.argsort(np.asarray(power_rel)[elig], kind="stable")]
+    return order[:max(int(budget), 0)]
+
+
+# --------------------------------------------------------------------------
+# Exact measurement
+# --------------------------------------------------------------------------
+
+def cube_slice_planes(n_i: int, start: int, n_rows: int) -> np.ndarray:
+    """(n_i, n_rows/32) int32 packed bit-planes of cube rows
+    [start, start + n_rows) — ``simulate.input_planes_np`` restricted to an
+    index slice (same lane packing), so the chunked exact pass feeds the
+    simulator the exact contract the fused kernel consumes."""
+    if n_rows % 32 or n_rows < 32:
+        raise ValueError(f"n_rows must be a positive multiple of 32, "
+                         f"got {n_rows}")
+    xs = np.arange(start, start + n_rows, dtype=np.uint64)
+    planes = []
+    for i in range(n_i):
+        bits = ((xs >> np.uint64(i)) & np.uint64(1)).astype(np.uint32)
+        words = bits.reshape(-1, 32)
+        packed = (words << np.arange(32, dtype=np.uint32)[None, :]).sum(
+            axis=1, dtype=np.uint32)
+        planes.append(packed)
+    return np.stack(planes).astype(np.int32)  # two's complement reinterpret
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _simulate_chunk(spec: CGPSpec, nodes: jax.Array, outs: jax.Array,
+                    in_planes: jax.Array) -> jax.Array:
+    """(W*32,) int32 candidate values on one packed cube slice.  One trace
+    per (spec, slice shape): every chunk of a width reuses the program."""
+    return simulate.simulate_values(Genome(nodes, outs), spec, in_planes)
+
+
+def _golden_slice(width: int, kind: str, start: int, n_rows: int
+                  ) -> np.ndarray:
+    """int64 exact golden outputs on cube rows [start, start + n_rows) —
+    ``golden.golden_values`` semantics without materializing the full cube."""
+    xs = np.arange(start, start + n_rows, dtype=np.int64)
+    a = xs & ((1 << width) - 1)
+    b = xs >> width
+    if kind == "mul":
+        return a * b
+    if kind == "add":
+        return a + b
+    raise ValueError(kind)
+
+
+def certified_metrics(nodes, outs, spec: CGPSpec, kind: str, width: int,
+                      gauss_sigma: float, dispatch_rows: int = DISPATCH_ROWS,
+                      n_gauss_side: int = 4,
+                      gauss_slack: float = 1.0) -> np.ndarray:
+    """EXACT (N_METRICS,) float32 metric vector over the full 2^(2w) cube.
+
+    Full-cube dispatch when the cube fits ``dispatch_rows`` (finalized via
+    ``metrics.metrics_np`` on the materialized values — bit-identical to the
+    exhaustive oracle); otherwise the chunked bit-parallel pass (module
+    docstring).  ``gauss_sigma``/``n_gauss_side``/``gauss_slack`` must match
+    the screening tier's so the certified verdict answers the same
+    constraint.
+    """
+    n = 1 << spec.n_i
+    nodes_j = jnp.asarray(nodes)
+    outs_j = jnp.asarray(outs)
+    if n <= dispatch_rows:
+        in_planes = simulate.input_planes(spec.n_i)
+        # sub-word cubes are tiled to 32 lanes; the first n values are the
+        # true cube, so slicing keeps the oracle comparison exact
+        cvals = np.asarray(
+            _simulate_chunk(spec, nodes_j, outs_j, in_planes))[:n]
+        gvals = _golden_slice(width, kind, 0, n)
+        return M.metrics_np(gvals, cvals, spec.n_o, gauss_sigma,
+                            n_gauss_side, gauss_slack)
+
+    # chunked pass: host-side int64/float64 partials, combined per the
+    # MetricPartials contract (psum everything, pmax wce_max)
+    chunk = 1 << (int(dispatch_rows).bit_length() - 1)  # pow2 divides pow2 n
+    chunk = max(32, min(chunk, n))
+    edges = M.gauss_bin_edges(gauss_sigma, n_gauss_side)
+    abs_sum = sgn_sum = err_count = acc0_bad = 0
+    wce = 0
+    rel_sum = 0.0
+    hist = np.zeros(len(edges) + 1, dtype=np.int64)
+    for start in range(0, n, chunk):
+        planes = jnp.asarray(cube_slice_planes(spec.n_i, start, chunk))
+        cvals = np.asarray(
+            _simulate_chunk(spec, nodes_j, outs_j, planes)).astype(np.int64)
+        g = _golden_slice(width, kind, start, chunk)
+        diff = g - cvals
+        ad = np.abs(diff)
+        abs_sum += int(ad.sum())
+        wce = max(wce, int(ad.max()))
+        err_count += int((diff != 0).sum())
+        rel_sum += float((ad / np.maximum(g, 1)).sum())
+        sgn_sum += int(diff.sum())
+        acc0_bad += int(((g == 0) & (cvals != 0)).sum())
+        idx = np.searchsorted(edges, diff.astype(np.float64), side="right")
+        hist += np.bincount(idx[diff != 0], minlength=len(edges) + 1)
+
+    out_range = float(1 << spec.n_o)
+    mass = M.gauss_bin_mass(gauss_sigma, n_gauss_side)
+    gauss_ok = float(np.all(hist <= mass * n * gauss_slack))
+    return np.array([
+        100.0 * (abs_sum / n) / out_range,
+        100.0 * wce / out_range,
+        100.0 * (err_count / n),
+        100.0 * (rel_sum / n),
+        100.0 * abs(sgn_sum / n) / out_range,
+        float(acc0_bad == 0),
+        gauss_ok,
+    ], dtype=np.float32)

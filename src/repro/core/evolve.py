@@ -85,6 +85,19 @@ class EvolveConfig:
     sample_size: int = 1 << 14       # rows (rounded up to pow2 words * 32)
     input_dist: str = "uniform"      # "uniform" | "gaussian" | "empirical"
     sample_seed: int = 0             # sample-stream seed (not the CGP seed)
+    # Exact-verification escalation tier (DESIGN.md §10, ``core.certify``):
+    # after each sampled sweep chunk is characterized, elites that satisfy
+    # the combined constraint ON THE SAMPLE are re-measured EXACTLY over the
+    # full 2^(2w) cube (full-cube dispatch or chunked bit-parallel pass),
+    # capped per chunk by the adaptive ``CertifyPolicy`` built from
+    # ``certify_budget``.  Result-changing for sampled grids (escalated
+    # rows' shard metrics become exact), so like ``eval_mode`` it joins the
+    # grid fingerprint — but ONLY when on, keeping pre-§10 sampled and all
+    # exhaustive fingerprints byte-identical.  No-op under exhaustive
+    # evaluation (the census is its own certificate) and on the serial
+    # ``evolve`` path.
+    certify: bool = False
+    certify_budget: int = 8          # base escalations per sweep chunk
 
     def __post_init__(self):
         if self.eval_mode not in ("exhaustive", "sampled"):
@@ -97,6 +110,9 @@ class EvolveConfig:
         if self.sample_size < 1:
             raise ValueError(
                 f"sample_size must be >= 1, got {self.sample_size}")
+        if self.certify_budget < 1:
+            raise ValueError(
+                f"certify_budget must be >= 1, got {self.certify_budget}")
 
 
 class EvalResult(NamedTuple):

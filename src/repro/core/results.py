@@ -60,7 +60,7 @@ import numpy as np
 from repro.checkpoint.store import atomic_save_npz, atomic_write_json
 from repro.core import metrics as M
 
-SCHEMA_VERSION = 2  # v2: + metrics_stderr summary column (DESIGN.md §9)
+SCHEMA_VERSION = 3  # v3: + certified_mask summary column (DESIGN.md §10)
 MANIFEST = "manifest.json"
 HISTORY_MODES = ("none", "summary", "full")
 _SHARD_RE = re.compile(r"^shard_(\d{8})_(\d{8})\.npz$")
@@ -84,9 +84,22 @@ SUMMARY_FIELDS = {
     "metrics_stderr": (("n_metrics",), "float32"),
     "power_rel": ((), "float32"),
     "feasible": ((), "uint8"),
+    # exact-certification flag (DESIGN.md §10): 1 when the row's error
+    # metrics are EXACT over the full cube (exhaustive census, or sampled +
+    # escalated through ``core.certify``), 0 for uncertified sampled
+    # estimates.  Part of SCHEMA_VERSION 3; v2 directories are READ with a
+    # zero default (``READ_DEFAULTS``) but cannot be extended by this writer.
+    "certified_mask": ((), "uint8"),
     "error_mean": ((), "float32"),
     "error_std": ((), "float32"),
 }
+
+#: summary fields absent from older schema versions the reader still
+#: accepts, keyed by manifest version: reads leave the buffer's dtype-zero
+#: default in place (certified_mask=0 — nothing in a pre-§10 directory was
+#: escalated to the exact tier).
+READ_DEFAULTS = {2: frozenset({"certified_mask"})}
+MIN_READ_VERSION = min(READ_DEFAULTS, default=SCHEMA_VERSION)
 
 #: per-generation history fields, present when ``keep_history != "none"``
 HISTORY_FIELDS = {
@@ -376,10 +389,16 @@ class SweepResultReader:
             raise FileNotFoundError(f"no results manifest at {path!r}")
         with open(path) as f:
             self.manifest = json.load(f)
-        if self.manifest["schema_version"] != SCHEMA_VERSION:
+        ver = self.manifest["schema_version"]
+        if not MIN_READ_VERSION <= ver <= SCHEMA_VERSION:
             raise ValueError(
-                f"shard schema v{self.manifest['schema_version']} != "
-                f"reader v{SCHEMA_VERSION}")
+                f"shard schema v{ver} not readable by "
+                f"v{SCHEMA_VERSION} reader "
+                f"(accepts v{MIN_READ_VERSION}..v{SCHEMA_VERSION})")
+        self.schema_version: int = ver
+        # fields this directory's shards predate; reads keep the dtype-zero
+        # default in their place (e.g. certified_mask=0 for v2 shards)
+        self._absent: frozenset = READ_DEFAULTS.get(ver, frozenset())
         self.n_runs: int = self.manifest["n_runs"]
         self.gens: int = self.manifest["dims"]["gens"]
         self.keep_history: str = self.manifest["keep_history"]
@@ -423,7 +442,10 @@ class SweepResultReader:
         for start, end in self.spans():
             path = os.path.join(self.results_dir, _shard_name(start, end))
             with np.load(path) as z:
-                keys = z.files if fields is None else fields
+                # drop fields the directory's schema version predates — the
+                # caller's pre-zeroed buffers keep the documented default
+                keys = (z.files if fields is None
+                        else [k for k in fields if k not in self._absent])
                 yield (start, end), {k: z[k] for k in keys}
 
     def iter_history(self) -> Iterator[tuple[np.ndarray, dict]]:
@@ -469,7 +491,8 @@ class SweepResultReader:
             idx = rows["grid_rows"]
             mask[idx] = True
             for key in fields:
-                out[key][idx] = rows[key]
+                if key in rows:  # else: version-absent, zero default stands
+                    out[key][idx] = rows[key]
         out["done_mask"] = mask
         return out
 
@@ -479,7 +502,7 @@ class SweepResultReader:
         from repro.core.search import CircuitRecord
         s = self.summary(["parent_nodes", "parent_outs", "metrics",
                           "metrics_stderr", "power_rel", "feasible",
-                          "error_mean", "error_std"])
+                          "certified_mask", "error_mean", "error_std"])
         grid = self.manifest["grid"]
         recs = []
         for i in np.flatnonzero(s["done_mask"]):
@@ -494,6 +517,7 @@ class SweepResultReader:
                 error_mean=float(s["error_mean"][i]),
                 error_std=float(s["error_std"][i]),
                 metrics_stderr=s["metrics_stderr"][i],
+                certified=bool(s["certified_mask"][i]),
             ))
         return recs
 

@@ -48,6 +48,13 @@ class CircuitRecord:
     # error), CLT estimates from the sample second moments when sampled.
     metrics_stderr: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(M.N_METRICS, np.float32))
+    # True when ``metrics`` is EXACT over the full input cube (DESIGN.md
+    # §10): always under eval_mode="exhaustive" (the census is its own
+    # certificate); for sampled runs only after the exact-verification
+    # escalation tier (``core.certify``) re-measured this circuit — sampled
+    # WCE/ACC0/GAUSS values are otherwise only lower bounds / on-sample
+    # verdicts and cannot certify a hard constraint.
+    certified: bool = False
 
 
 def problem_arrays(cfg: SearchConfig):
@@ -127,6 +134,8 @@ def characterize(genome: Genome, spec: CGPSpec, cfg: SearchConfig,
         error_mean=float(emean),
         error_std=float(estd),
         metrics_stderr=stderr,
+        # serial path has no escalation driver: exact iff exhaustive
+        certified=cfg.evolve.eval_mode != "sampled",
     )
 
 

@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import store
+from repro.core import certify
 from repro.core import metrics as M
 from repro.core import simulate
 from repro.core.evalcache import PhenotypeLRU
@@ -231,6 +232,12 @@ class SweepResult:
     results_dir: str | None = None     # shard spill location, if streaming
     dedup_stats: dict | None = None    # phenotype-cache counters (§8), when
                                        # the dedup path ran this call
+    certified_mask: np.ndarray | None = None  # (n_runs,) bool — rows whose
+                                       # error metrics are EXACT (§10): the
+                                       # whole grid for exhaustive sweeps,
+                                       # escalated elites for sampled ones
+    certify_stats: dict | None = None  # escalation counters, when the
+                                       # §10 escalation tier ran this call
 
     def reader(self) -> SweepResultReader:
         """Open the shard set this sweep streamed to (requires a
@@ -490,6 +497,12 @@ def grid_fingerprint(cfg, grid, keep_history: str | bool) -> str:
         ident["eval_mode"] = ecfg.eval_mode
         ident["sample_stream"] = sampling.stream_fingerprint(
             cfg.width, ecfg.sample_size, ecfg.input_dist, ecfg.sample_seed)
+        # the exact-verification escalation tier (DESIGN.md §10) rewrites
+        # escalated rows' shard metrics with certified values, so it is
+        # result-changing for sampled grids; keys appear only when on, so
+        # pre-§10 sampled (and all exhaustive) fingerprints are unchanged
+        if getattr(ecfg, "certify", False):
+            ident["certify"] = {"budget": int(ecfg.certify_budget)}
     return hashlib.sha256(json.dumps(ident, sort_keys=True,
                                      default=float).encode()).hexdigest()
 
@@ -508,6 +521,7 @@ def _alloc_buffers(spec: CGPSpec, n_runs: int, gens: int,
         "metrics_stderr": np.zeros((n_runs, M.N_METRICS), np.float32),
         "power_rel": np.zeros((n_runs,), np.float32),
         "feasible": np.zeros((n_runs,), np.uint8),
+        "certified_mask": np.zeros((n_runs,), np.uint8),
         "error_mean": np.zeros((n_runs,), np.float32),
         "error_std": np.zeros((n_runs,), np.float32),
     }
@@ -598,6 +612,17 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             cfg.width, cfg.evolve.sample_size, cfg.evolve.input_dist,
             cfg.evolve.sample_seed),)
 
+    # exact-verification escalation tier (DESIGN.md §10): sampled grids
+    # only — an exhaustive census is already exact, so every exhaustive row
+    # is marked certified without escalation and ``certify`` is a no-op.
+    certify_on = sampled and bool(getattr(cfg.evolve, "certify", False))
+    policy = (certify.CertifyPolicy(budget=cfg.evolve.certify_budget)
+              if certify_on else None)
+    # budget position of each span in the FULL deterministic plan (not this
+    # pod's slice), so pods and resumed sweeps budget identically
+    plan_pos = {span: i for i, span in enumerate(chunks)}
+    n_escalated = 0
+
     dedup = sweep.dedup if sweep.dedup is not None else cfg.evolve.dedup
     if dedup and sweep.model_axis is not None:
         # diagnosed before the mesh check: the incompatibility holds
@@ -678,16 +703,41 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             jnp.asarray(thr[sel]), in_planes, gvals, gpower,
             sampled=sampled)
 
+        nodes_np = np.asarray(state.parent.nodes)[:n]
+        outs_np = np.asarray(state.parent.outs)[:n]
+        met_np = np.asarray(met)[:n].copy()
+        sterr_np = np.asarray(sterr)[:n].copy()
+        feas_np = np.asarray(feas)[:n].astype(np.uint8)
+        cert = np.zeros(n, np.uint8)
+        if not sampled:
+            cert[:] = 1  # the census is its own certificate (§10)
+        elif certify_on:
+            # escalate the best sampled-feasible elites to the exact tier:
+            # their shard rows become certified-exact measurements
+            cap = policy.chunk_budget(plan_pos[(start, end)], len(chunks))
+            for r in certify.select_escalations(feas_np, np.asarray(prel)[:n],
+                                                cert, cap):
+                cmet = certify.certified_metrics(
+                    nodes_np[r], outs_np[r], spec, cfg.kind, cfg.width,
+                    sigma, dispatch_rows=policy.dispatch_rows)
+                met_np[r] = cmet
+                sterr_np[r] = 0.0  # no sampling error left to report
+                feas_np[r] = np.uint8(
+                    certify.feasible_np(cmet, thr[orig[r]]))
+                cert[r] = 1
+                n_escalated += 1
+
         chunk_rows = {
-            "parent_nodes": np.asarray(state.parent.nodes)[:n],
-            "parent_outs": np.asarray(state.parent.outs)[:n],
+            "parent_nodes": nodes_np,
+            "parent_outs": outs_np,
             "best_nodes": np.asarray(state.best.nodes)[:n],
             "best_outs": np.asarray(state.best.outs)[:n],
             "best_fit": np.asarray(state.best_fit)[:n],
-            "metrics": np.asarray(met)[:n],
-            "metrics_stderr": np.asarray(sterr)[:n],
+            "metrics": met_np,
+            "metrics_stderr": sterr_np,
             "power_rel": np.asarray(prel)[:n],
-            "feasible": np.asarray(feas)[:n].astype(np.uint8),
+            "feasible": feas_np,
+            "certified_mask": cert,
             "error_mean": np.asarray(emean)[:n],
             "error_std": np.asarray(estd)[:n],
         }
@@ -738,6 +788,7 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             error_mean=float(bufs["error_mean"][i]),
             error_std=float(bufs["error_std"][i]),
             metrics_stderr=bufs["metrics_stderr"][i],
+            certified=bool(bufs["certified_mask"][i]),
         ))
 
     return SweepResult(
@@ -757,4 +808,10 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
         runs_per_sec=(ran / dt) if ran else 0.0,
         results_dir=sweep.results_dir,
         dedup_stats=cache.stats.as_dict() if cache is not None else None,
+        certified_mask=bufs["certified_mask"].astype(bool),
+        certify_stats=({
+            "escalated": n_escalated,
+            "certified_rows": int(bufs["certified_mask"].sum()),
+            "budget": int(cfg.evolve.certify_budget),
+        } if certify_on else None),
     )

@@ -100,6 +100,21 @@ def main():
                     help="counter-based PRNG seed of the sample stream "
                          "(deterministic + checkpoint-replayable; part of "
                          "the grid fingerprint)")
+    ap.add_argument("--certify", action="store_true",
+                    help="exact-verification escalation tier (DESIGN.md "
+                         "section 10): after each sampled sweep chunk, the "
+                         "best elites that satisfy the combined constraint "
+                         "on sampled metrics are re-measured EXACTLY over "
+                         "the full 2^(2w) cube (one dispatch at small "
+                         "widths, a chunked bit-parallel pass at large "
+                         "ones), so emitted WCE/ACC0 verdicts are "
+                         "guarantees, not estimates.  No-op under "
+                         "--eval-mode exhaustive (a census is already "
+                         "exact)")
+    ap.add_argument("--certify-budget", type=int, default=8,
+                    help="base escalations per sweep chunk; the adaptive "
+                         "policy ramps the cap toward exact checks as the "
+                         "sweep converges (default: 8)")
     ap.add_argument("--out", default=None)
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="runs per jit'd batch of the sweep engine")
@@ -137,6 +152,9 @@ def main():
                  "pod-shard the grid (drop --serial or --pods)")
     if args.serial and args.dedup:
         ap.error("--dedup lives in the batched sweep engine; drop --serial")
+    if args.serial and args.certify:
+        ap.error("--certify's escalation driver lives in the batched sweep "
+                 "engine; drop --serial")
 
     cfg = SearchConfig(
         width=args.width, kind=args.kind, n_n=args.nodes,
@@ -145,7 +163,9 @@ def main():
                             eval_mode=args.eval_mode,
                             sample_size=args.sample_size,
                             input_dist=args.input_dist,
-                            sample_seed=args.sample_seed))
+                            sample_seed=args.sample_seed,
+                            certify=args.certify,
+                            certify_budget=args.certify_budget))
     constraints = [parse_constraint(c) for c in args.constraint]
     if args.serial:
         records = run_sweep_serial(cfg, constraints, seeds=range(args.seeds))
@@ -170,6 +190,12 @@ def main():
         tag = f"pod {pod}/{args.pods}: " if args.pods > 1 else ""
         print(f"[evolve] {tag}{result.completed}/{result.n_runs} runs "
               f"@ {result.runs_per_sec:.2f} runs/s", flush=True)
+        if args.certify and result.certify_stats is not None:
+            st = result.certify_stats
+            print(f"[evolve] certify: {st['escalated']} escalations this "
+                  f"call, {st['certified_rows']}/{result.n_runs} rows "
+                  f"certified exact (budget {st['budget']}/chunk)",
+                  flush=True)
         if args.dedup and result.dedup_stats is not None:
             st = result.dedup_stats
             print(f"[evolve] dedup cache: hit rate {st['hit_rate']:.1%} "
@@ -194,6 +220,10 @@ def main():
             row["metrics_stderr"] = {
                 n: round(float(v), 6)
                 for n, v in zip(metric_names, r.metrics_stderr)}
+            if args.certify:
+                # only under --certify, so sampled-only output stays
+                # byte-identical to the pre-§10 CLI
+                row["certified"] = r.certified
         print(json.dumps(row), flush=True)
     if args.out:
         save_library(records, args.out)

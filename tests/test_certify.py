@@ -1,0 +1,373 @@
+"""Differential certification harness for the exact-verification tier
+(DESIGN.md §10, ``core.certify``).
+
+The contracts this file proves:
+
+  * certified metrics are BIT-IDENTICAL to the exhaustive oracle
+    (``metrics.metrics_np`` over ``simulate.simulate_values_np``) at widths
+    where the oracle is tractable — for standalone ``certified_metrics``
+    calls AND for every elite the sweep's escalation driver certifies;
+  * the chunked bit-parallel regime agrees with the full-cube dispatch
+    exactly on the integer-derived metrics (MAE/WCE/ER/AVG/ACC0/GAUSS) and
+    to float64-reassociation tolerance on MRE;
+  * certified WCE is an upper bound of every sampled lower bound, and a
+    sampled ACC0 failure is never contradicted by the certified verdict;
+  * sampled hard constraints (WCE/ACC0/GAUSS) are *uncertified* without an
+    escalation: ``metric_stderr`` reports 0 for them (no CLT interval to
+    lean on) and sampled-feasible rows keep ``certified=False`` unless the
+    exact tier re-measured them.
+
+Heavy legs (width ≥ 8 oracles, a width-12 escalation) carry the
+``certify`` marker: excluded from the default tier-1 run, included in
+``make test-full`` and the CI certify leg.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import certify
+from repro.core import golden as G
+from repro.core import metrics as M
+from repro.core import sampling, simulate
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec, feasible
+from repro.core.genome import Genome
+from repro.core.mutate import mutate_population
+from repro.core.search import SearchConfig
+from repro.core.sweep import (SweepConfig, grid_fingerprint,
+                              run_sweep_batched, sweep_grid)
+
+SIGMA = 256.0
+
+
+def _mutants(width, n_n, count, rate=0.05, seed=0):
+    """(spec, nodes (count, n_n, 3), outs (count, n_o)) — mutated copies of
+    the exact golden netlist, so error metrics are small but nonzero."""
+    gold, spec = G.array_multiplier(width, n_n=n_n)
+    pop = mutate_population(jax.random.PRNGKey(seed), gold, spec, count, rate)
+    return spec, np.asarray(pop.nodes), np.asarray(pop.outs)
+
+
+def _oracle(nodes, outs, spec, width, kind="mul", sigma=SIGMA):
+    """The exhaustive-tier oracle: NumPy reference simulation of the full
+    cube finalized through ``metrics_np`` — independent of the jit'd
+    simulation path ``certified_metrics`` dispatches."""
+    n = 1 << spec.n_i
+    cvals = simulate.simulate_values_np(
+        Genome(np.asarray(nodes), np.asarray(outs)), spec)[:n]
+    gvals = G.golden_values(width, kind)[:n]
+    return M.metrics_np(gvals, cvals, spec.n_o, sigma)
+
+
+def _sampled_metrics(nodes, outs, spec, width, sample_size, sample_seed,
+                     kind="mul", sigma=SIGMA):
+    """Sampled-tier metrics of one genome: the same packed sample planes the
+    sampled kernel consumes (§9 operand streams), finalized through
+    ``metrics_np``."""
+    planes, gvals = sampling.sample_problem(width, kind, sample_size,
+                                            "uniform", sample_seed)
+    cvals = np.asarray(simulate.simulate_values(
+        Genome(jnp.asarray(nodes), jnp.asarray(outs)), spec,
+        jnp.asarray(planes)))
+    return M.metrics_np(gvals.astype(np.int64), cvals, spec.n_o, sigma)
+
+
+# ---------------------- certified_metrics vs the oracle --------------------
+
+@pytest.mark.parametrize("width,n_n", [(3, 64), (4, 80), (5, 120)])
+def test_certified_metrics_bit_identical_to_oracle(width, n_n):
+    """Full-cube dispatch regime: certified == exhaustive oracle, bitwise,
+    including for genomes with nonzero error."""
+    spec, nodes, outs = _mutants(width, n_n, 4)
+    for i in range(len(nodes)):
+        cert = certify.certified_metrics(nodes[i], outs[i], spec, "mul",
+                                         width, SIGMA)
+        np.testing.assert_array_equal(
+            cert, _oracle(nodes[i], outs[i], spec, width))
+
+
+def test_certified_metrics_add_kind():
+    gold, spec = G.ripple_carry_adder(4, n_n=40)
+    pop = mutate_population(jax.random.PRNGKey(3), gold, spec, 3, 0.05)
+    nodes, outs = np.asarray(pop.nodes), np.asarray(pop.outs)
+    for i in range(3):
+        cert = certify.certified_metrics(nodes[i], outs[i], spec, "add",
+                                         4, SIGMA)
+        np.testing.assert_array_equal(
+            cert, _oracle(nodes[i], outs[i], spec, 4, kind="add"))
+
+
+def test_chunked_pass_matches_full_dispatch():
+    """Forcing the chunked bit-parallel regime (tiny dispatch budget) must
+    agree with the one-dispatch answer: exactly on every integer-derived
+    metric, to float64-reassociation tolerance on MRE."""
+    spec, nodes, outs = _mutants(5, 120, 4)
+    int_exact = [M.MAE, M.WCE, M.ER, M.AVG, M.ACC0, M.GAUSS]
+    for i in range(len(nodes)):
+        full = certify.certified_metrics(nodes[i], outs[i], spec, "mul",
+                                         5, SIGMA)
+        chunked = certify.certified_metrics(nodes[i], outs[i], spec, "mul",
+                                            5, SIGMA, dispatch_rows=128)
+        np.testing.assert_array_equal(chunked[int_exact], full[int_exact])
+        np.testing.assert_allclose(chunked[M.MRE], full[M.MRE], rtol=1e-6)
+        # and the full dispatch is the oracle, so the chunked integer
+        # metrics are transitively exact
+        np.testing.assert_array_equal(
+            full, _oracle(nodes[i], outs[i], spec, 5))
+
+
+def test_cube_slice_planes_match_exhaustive_packing():
+    full = simulate.input_planes_np(10)  # width-5 cube: 1024 rows, 32 words
+    np.testing.assert_array_equal(certify.cube_slice_planes(10, 0, 1024),
+                                  full)
+    # a mid-cube slice is the corresponding word columns of the full cube
+    np.testing.assert_array_equal(certify.cube_slice_planes(10, 512, 512),
+                                  full[:, 16:])
+    with pytest.raises(ValueError):
+        certify.cube_slice_planes(4, 0, 31)
+
+
+# ----------------- sampled lower bounds vs certified truth -----------------
+
+def test_certified_wce_dominates_sampled_lower_bound():
+    """Property (over genomes × sample streams): the sample max is a lower
+    bound, so certified WCE >= sampled WCE always — and a sampled ACC0
+    failure (observed violation) is never contradicted by the certified
+    verdict."""
+    spec, nodes, outs = _mutants(4, 80, 6, rate=0.08)
+    saw_strict = False
+    for i in range(len(nodes)):
+        cert = certify.certified_metrics(nodes[i], outs[i], spec, "mul",
+                                         4, SIGMA)
+        for sample_seed in range(3):
+            samp = _sampled_metrics(nodes[i], outs[i], spec, 4, 64,
+                                    sample_seed)
+            assert cert[M.WCE] >= samp[M.WCE]
+            saw_strict |= bool(cert[M.WCE] > samp[M.WCE])
+            if samp[M.ACC0] == 0.0:  # violation observed on the sample
+                assert cert[M.ACC0] == 0.0
+    assert saw_strict, "every sample saw the true WCE — property is vacuous"
+
+
+# -------------------- stderr misuse guard (satellite 2) --------------------
+
+def test_metric_stderr_zero_for_uncertifiable_metrics():
+    """Regression guard: WCE/ACC0/GAUSS have no CLT interval — a sample max
+    / indicator verdict admits no standard error, and downstream code must
+    never read a confidence bound for them."""
+    rng = np.random.default_rng(0)
+    g = rng.integers(0, 256, 2048).astype(np.int64)
+    c = np.clip(g + rng.integers(-5, 6, 2048), 0, 255).astype(np.int64)
+    partials = M.error_partials(jnp.asarray(g, jnp.int32),
+                                jnp.asarray(c, jnp.int32), SIGMA, n_bits=8)
+    sterr = np.asarray(M.metric_stderr(partials, 8))
+    assert (sterr[list(certify.UNCERTIFIABLE)] == 0).all()
+    assert sterr[M.MAE] > 0  # CLT metrics do report an interval
+
+
+def test_requires_certification_flags_hard_constraints():
+    assert certify.requires_certification(ConstraintSpec(wce=2.0).thresholds())
+    assert certify.requires_certification(
+        ConstraintSpec(acc0=True).thresholds())
+    assert certify.requires_certification(
+        ConstraintSpec(gauss=True, gauss_sigma=SIGMA).thresholds())
+    # CLT-bounded metrics alone do not demand the exact tier
+    assert not certify.requires_certification(
+        ConstraintSpec(mae=0.5, er=60.0, mre=5.0, avg=1.0).thresholds())
+
+
+def test_sampled_hard_constraint_stays_uncertified_without_escalation():
+    """The guard itself: a sampled sweep whose constraint binds WCE can be
+    feasible ON THE SAMPLE, but no row is certified unless the escalation
+    tier ran."""
+    cfg = SearchConfig(
+        width=3, kind="mul", n_n=64,
+        evolve=EvolveConfig(generations=20, lam=3, eval_mode="sampled",
+                            sample_size=48))
+    res = run_sweep_batched(cfg, [ConstraintSpec(wce=30.0)], (0, 1),
+                            SweepConfig(chunk_size=2, keep_history="none"))
+    assert certify.requires_certification(ConstraintSpec(wce=30.0)
+                                          .thresholds())
+    assert res.feasible.any()            # satisfied on the sample...
+    assert not res.certified_mask.any()  # ...but nothing is certified
+    assert all(not r.certified for r in res.records)
+    assert res.certify_stats is None
+
+
+def test_exhaustive_rows_certified_by_census():
+    """An exhaustive sweep is its own certificate: every row certified, no
+    escalations, and the certify flag is fingerprint-neutral there."""
+    cfg = SearchConfig(width=3, kind="mul", n_n=64,
+                       evolve=EvolveConfig(generations=15, lam=3))
+    res = run_sweep_batched(cfg, [ConstraintSpec(mae=8.0)], (0,),
+                            SweepConfig(chunk_size=2, keep_history="none"))
+    assert res.certified_mask.all()
+    assert all(r.certified for r in res.records)
+    assert res.certify_stats is None  # no escalation tier ran
+
+
+# ------------------- the sweep escalation driver (§10) ---------------------
+
+def _sweep_cfg(certify_on, budget=8, width=4, n_n=80):
+    return SearchConfig(
+        width=width, kind="mul", n_n=n_n,
+        evolve=EvolveConfig(generations=40, lam=3, eval_mode="sampled",
+                            sample_size=128, certify=certify_on,
+                            certify_budget=budget))
+
+
+def test_sweep_escalated_elites_bit_identical_to_oracle():
+    """The differential harness proper: every elite the driver certifies
+    carries metrics bit-identical to the exhaustive oracle recomputed from
+    its genome, with zeroed stderr and an exact-feasibility verdict."""
+    cfg = _sweep_cfg(True)
+    cons = [ConstraintSpec(wce=25.0, acc0=True), ConstraintSpec(mae=8.0)]
+    res = run_sweep_batched(cfg, cons, (0, 1),
+                            SweepConfig(chunk_size=2, keep_history="none"))
+    _, spec = G.array_multiplier(4, n_n=80)
+    certified = np.flatnonzero(res.certified_mask)
+    assert certified.size, "no elite escalated — the harness is vacuous"
+    assert res.certify_stats["escalated"] == certified.size
+    assert res.completed == res.n_runs  # records are grid-ordered and full
+    for i in certified:
+        r = res.records[i]
+        assert r.certified
+        oracle = _oracle(r.genome_nodes, r.genome_outs, spec, 4)
+        np.testing.assert_array_equal(r.metrics, oracle)
+        np.testing.assert_array_equal(res.metrics[i], oracle)
+        assert (r.metrics_stderr == 0).all()
+        # the shipped feasibility verdict is the EXACT one (Eq. 9 on the
+        # certified metrics, against this row's own thresholds)
+        assert bool(res.feasible[i]) == certify.feasible_np(
+            oracle, res.thresholds[i])
+
+
+def test_escalation_respects_budget():
+    cfg = _sweep_cfg(True, budget=1)
+    cons = [ConstraintSpec(wce=25.0), ConstraintSpec(mae=8.0)]
+    res = run_sweep_batched(cfg, cons, (0, 1),
+                            SweepConfig(chunk_size=2, keep_history="none"))
+    # 2 chunks, base budget 1, ramp=1 → caps 1 and 2: at most 3 escalations
+    assert 1 <= res.certify_stats["escalated"] <= 3
+    # certified rows are the sampled-feasible ones with the LOWEST power
+    # among their chunk's eligibles — at minimum, all certified rows were
+    # sampled-feasible at escalation time
+    assert res.certified_mask.sum() == res.certify_stats["certified_rows"]
+
+
+def test_certify_policy_budget_ramp():
+    pol = certify.CertifyPolicy(budget=4, ramp=1.0)
+    caps = [pol.chunk_budget(i, 10) for i in range(10)]
+    assert caps[0] == 4 and caps[-1] == 8
+    assert all(a <= b for a, b in zip(caps, caps[1:]))  # monotone ramp
+    assert certify.CertifyPolicy(budget=4, ramp=0.0).chunk_budget(9, 10) == 4
+    assert certify.CertifyPolicy(budget=4).chunk_budget(0, 1) == 4
+    with pytest.raises(ValueError):
+        certify.CertifyPolicy(budget=0)
+    with pytest.raises(ValueError):
+        certify.CertifyPolicy(ramp=-0.1)
+    with pytest.raises(ValueError):
+        certify.CertifyPolicy(dispatch_rows=33)
+    with pytest.raises(ValueError):
+        EvolveConfig(certify_budget=0)
+
+
+def test_select_escalations_orders_by_power_and_skips_certified():
+    feas = np.array([1, 0, 1, 1, 1], bool)
+    power = np.array([0.9, 0.1, 0.3, 0.5, 0.2], np.float32)
+    done = np.array([0, 0, 0, 1, 0], bool)
+    # eligible: rows 0, 2, 4 (1 infeasible, 3 already certified), best first
+    np.testing.assert_array_equal(
+        certify.select_escalations(feas, power, done, 10), [4, 2, 0])
+    np.testing.assert_array_equal(
+        certify.select_escalations(feas, power, done, 2), [4, 2])
+    assert certify.select_escalations(feas, power, done, 0).size == 0
+
+
+def test_feasible_np_mirrors_jax_predicate():
+    rng = np.random.default_rng(1)
+    specs = [ConstraintSpec(mae=1.0, wce=1.5),
+             ConstraintSpec(wce=0.5, acc0=True),
+             ConstraintSpec(er=50.0, gauss=True, gauss_sigma=SIGMA),
+             ConstraintSpec(mae=0.2)]
+    for _ in range(16):
+        m = rng.uniform(0, 2, M.N_METRICS).astype(np.float32)
+        m[M.ACC0] = float(rng.integers(0, 2))
+        m[M.GAUSS] = float(rng.integers(0, 2))
+        for con in specs:
+            t = con.thresholds()
+            assert certify.feasible_np(m, t) == bool(np.asarray(
+                feasible(jnp.asarray(m), jnp.asarray(t))))
+
+
+def test_certify_joins_sampled_grid_fingerprint_only_when_on():
+    grid = sweep_grid([ConstraintSpec(mae=1.0)], (0,))
+
+    def fp(eval_mode, certify_on, budget=8):
+        cfg = SearchConfig(
+            width=3, kind="mul", n_n=64,
+            evolve=EvolveConfig(eval_mode=eval_mode, sample_size=64,
+                                certify=certify_on, certify_budget=budget))
+        return grid_fingerprint(cfg, grid, "none")
+
+    # exhaustive fingerprints ignore the certify knobs entirely
+    assert fp("exhaustive", False) == fp("exhaustive", True)
+    # sampled: off == pre-§10 identity; on keys the directory apart,
+    # budget changes the identity too (it changes which rows get exact)
+    assert fp("sampled", False) != fp("sampled", True)
+    assert fp("sampled", True, 8) != fp("sampled", True, 4)
+
+
+# ------------------------- heavy parity legs -------------------------------
+
+@pytest.mark.certify
+def test_width8_certified_bit_identity():
+    """Acceptance leg: width-8 mutated elites, certified vs the 65536-row
+    exhaustive oracle, bitwise."""
+    spec, nodes, outs = _mutants(8, None, 4, rate=0.02)
+    for i in range(len(nodes)):
+        cert = certify.certified_metrics(nodes[i], outs[i], spec, "mul",
+                                         8, SIGMA)
+        np.testing.assert_array_equal(
+            cert, _oracle(nodes[i], outs[i], spec, 8))
+
+
+@pytest.mark.certify
+def test_width8_chunked_regime_exact():
+    """The chunked bit-parallel pass at width 8 (8 dispatches) against the
+    oracle: integer metrics exact."""
+    spec, nodes, outs = _mutants(8, None, 2, rate=0.02)
+    int_exact = [M.MAE, M.WCE, M.ER, M.AVG, M.ACC0, M.GAUSS]
+    for i in range(len(nodes)):
+        chunked = certify.certified_metrics(nodes[i], outs[i], spec, "mul",
+                                            8, SIGMA, dispatch_rows=8192)
+        oracle = _oracle(nodes[i], outs[i], spec, 8)
+        np.testing.assert_array_equal(chunked[int_exact], oracle[int_exact])
+        np.testing.assert_allclose(chunked[M.MRE], oracle[M.MRE], rtol=1e-6)
+
+
+@pytest.mark.certify
+def test_width12_sampled_sweep_certify_emits_exact_elites():
+    """The acceptance scenario: a width-12 sampled sweep under --certify
+    escalates its elite through the chunked exact pass (16.7M-row cube, 16
+    dispatches) and emits certified metrics with zero stderr."""
+    gold, spec = G.array_multiplier(12, n_n=None)  # auto-sized netlist
+    cfg = SearchConfig(
+        width=12, kind="mul", n_n=spec.n_n,
+        evolve=EvolveConfig(generations=3, lam=2, eval_mode="sampled",
+                            sample_size=2048, certify=True,
+                            certify_budget=1))
+    res = run_sweep_batched(cfg, [ConstraintSpec(wce=25.0)], (0,),
+                            SweepConfig(chunk_size=1, keep_history="none"))
+    assert res.certify_stats["escalated"] == 1
+    rec = res.records[0]
+    assert rec.certified
+    assert (rec.metrics_stderr == 0).all()
+    assert np.isfinite(rec.metrics).all()
+    # certified WCE must dominate the sampled lower bound of the same genome
+    samp = _sampled_metrics(rec.genome_nodes, rec.genome_outs, spec, 12,
+                            2048, 0)
+    assert rec.metrics[M.WCE] >= samp[M.WCE]

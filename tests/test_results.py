@@ -7,16 +7,18 @@ history mode; an interrupted sweep must replay into a consistent shard set
 must be refused, mirroring the checkpoint fingerprint guards.
 """
 import dataclasses
+import json
 import os
 
 import numpy as np
 import pytest
 
+from repro.core import certify
 from repro.core import metrics as M
 from repro.core.evolve import EvolveConfig
 from repro.core.fitness import ConstraintSpec
-from repro.core.results import (SweepResultReader, SweepResultWriter,
-                                normalize_history_mode)
+from repro.core.results import (SCHEMA_VERSION, SweepResultReader,
+                                SweepResultWriter, normalize_history_mode)
 from repro.core.search import SearchConfig
 from repro.core.sweep import SweepConfig, run_sweep_batched
 
@@ -50,6 +52,9 @@ def _assert_reader_matches(reader, in_ram):
                                   in_ram.feasible)
     np.testing.assert_array_equal(s["best_fit"], in_ram.best_fit)
     np.testing.assert_array_equal(s["thresholds"], in_ram.thresholds)
+    # exhaustive grid: every row census-certified, round-tripped (§10)
+    np.testing.assert_array_equal(s["certified_mask"].astype(bool),
+                                  in_ram.certified_mask)
     # the paper's analyses, bit-for-bit (ISSUE 3 acceptance)
     np.testing.assert_array_equal(reader.correlations(),
                                   in_ram.correlations())
@@ -165,3 +170,114 @@ def test_reader_requires_manifest(tmp_path):
                             SweepConfig(chunk_size=1, keep_history="none"))
     with pytest.raises(ValueError, match="results_dir"):
         res.reader()
+
+
+# ----------- schema v3: the certified_mask column (DESIGN.md §10) ----------
+
+# budget 1 on 3 chunks of 2 (ramp caps 1/2/2) cannot cover all 6 feasible
+# rows, so the shard set holds BOTH certified and uncertified rows
+_SAMPLED_CFG = SearchConfig(
+    width=3, kind="mul", n_n=64,
+    evolve=EvolveConfig(generations=25, lam=3, eval_mode="sampled",
+                        sample_size=48, certify=True, certify_budget=1))
+_SAMPLED_CONS = [ConstraintSpec(wce=30.0), ConstraintSpec(mae=8.0),
+                 ConstraintSpec(er=80.0)]
+
+
+def _sampled_spill(tmp_path, **kw):
+    sweep = SweepConfig(chunk_size=2, keep_history="none",
+                        results_dir=str(tmp_path), **kw)
+    return run_sweep_batched(_SAMPLED_CFG, _SAMPLED_CONS, SEEDS, sweep)
+
+
+def test_certified_mask_round_trips_schema_v3(tmp_path):
+    res = _sampled_spill(tmp_path)
+    assert res.certified_mask.any(), "no escalations — round trip is vacuous"
+    assert not res.certified_mask.all(), "budget failed to leave a mix"
+    reader = res.reader()
+    assert reader.schema_version == SCHEMA_VERSION == 3
+    s = reader.summary(["certified_mask", "metrics_stderr", "metrics"])
+    np.testing.assert_array_equal(s["certified_mask"].astype(bool),
+                                  res.certified_mask)
+    np.testing.assert_array_equal(s["metrics"], res.metrics)
+    # certified rows spill with zero stderr (exact measurements)
+    assert (s["metrics_stderr"][res.certified_mask] == 0).all()
+    recs = reader.records()
+    assert [r.certified for r in recs] == res.certified_mask.tolist()
+
+
+def test_escalations_ride_resume_without_recertifying(tmp_path, monkeypatch):
+    """Satellite: certified results are part of the shard resume state — an
+    interrupted sweep never re-runs the exact tier for rows a committed
+    chunk already certified."""
+    partial = _sampled_spill(tmp_path, max_chunks=2)
+    done1 = partial.certified_mask.copy()
+    assert done1.any(), "interrupt landed before any escalation"
+
+    calls = []
+    real = certify.certified_metrics
+
+    def counting(*args, **kw):
+        calls.append(args)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(certify, "certified_metrics", counting)
+    resumed = _sampled_spill(tmp_path)
+    assert resumed.completed == N_RUNS
+    # previously-certified rows ride the restored shards untouched...
+    assert resumed.certified_mask[done1].all()
+    # ...and the exact tier ran only for the chunks executed this call
+    assert len(calls) == int(resumed.certified_mask.sum() - done1.sum())
+
+    calls.clear()
+    again = _sampled_spill(tmp_path)  # fully-covered directory: no-op
+    assert again.completed == N_RUNS and not calls
+    np.testing.assert_array_equal(again.certified_mask,
+                                  resumed.certified_mask)
+
+
+def _downgrade_to_v2(results_dir):
+    """Rewrite a v3 directory as its v2 equivalent: drop the
+    certified_mask column and stamp the old version."""
+    man_path = os.path.join(str(results_dir), "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    man["schema_version"] = 2
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    for name in os.listdir(str(results_dir)):
+        if not name.startswith("shard_"):
+            continue
+        p = os.path.join(str(results_dir), name)
+        with np.load(p) as z:
+            data = {k: z[k] for k in z.files if k != "certified_mask"}
+        np.savez(p, **data)
+
+
+def test_v2_directories_read_with_certified_default(tmp_path, in_ram):
+    """Backward-readability: v2 shard sets (pre-§10) load fine, with
+    certified_mask defaulting to 0 for every row."""
+    _spill(tmp_path, "summary")
+    _downgrade_to_v2(tmp_path)
+    reader = SweepResultReader(str(tmp_path))
+    assert reader.schema_version == 2
+    s = reader.summary()
+    assert s["done_mask"].all()
+    assert not s["certified_mask"].any()  # reader-side default
+    np.testing.assert_array_equal(s["metrics"], in_ram.metrics)
+    assert all(not r.certified for r in reader.records())
+    # full-field shard iteration also works without the absent column
+    for _, rows in reader.iter_shards():
+        assert "certified_mask" not in rows and "metrics" in rows
+
+
+def test_future_schema_version_refused(tmp_path):
+    _spill(tmp_path, "none", max_chunks=1)
+    man_path = os.path.join(str(tmp_path), "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    man["schema_version"] = SCHEMA_VERSION + 1
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="not readable"):
+        SweepResultReader(str(tmp_path))
