@@ -151,6 +151,13 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
     jnp backend — the Pallas byte-split ``_exact_sum`` regime is not exact
     at n_o = 24 (DESIGN.md §9).  Emits ``sampled_runs_per_s``, the key the
     bench gate tracks.
+
+    The ``async_commit`` leg times the same grid streamed through the
+    results layer chunk-by-chunk (history kept, so the shard payload is
+    real), sync vs ``async_commit=True`` (DESIGN.md §11) into fresh temp
+    dirs.  ``async_commit_speedup`` is the ratio the gate tracks; on a
+    CPU-bound smoke box the overlap window is thin, so ~1.0 is expected —
+    the key mostly guards against the committer *adding* overhead.
     """
     import dataclasses
 
@@ -230,6 +237,33 @@ def bench_sweep(width: int = 3, gens: int = 200, lam: int = 4,
     out["sampled_runs_per_s"] = sn / t_s
     out["sampled_inputs_per_s"] = (sn * sampled_gens * lam
                                    * sampled_size / t_s)
+
+    # --- async-commit leg (DESIGN.md §11): overlap shard commits with the
+    # next chunk's evaluation; fresh temp dir per timed run so every commit
+    # is a real write (a reused dir would skip committed spans on resume)
+    import shutil
+    import tempfile
+
+    acfg = dataclasses.replace(
+        cfg, evolve=dataclasses.replace(cfg.evolve, backend=backends[0]))
+
+    def one_commit_run(async_on):
+        d = tempfile.mkdtemp(prefix="bench_async_commit_")
+        try:
+            sw = SweepConfig(chunk_size=max(2, n_runs // 4),
+                             keep_history=True, results_dir=d,
+                             async_commit=async_on)
+            t0 = time.perf_counter()
+            run_sweep_batched(acfg, cons, seeds, sw)
+            return time.perf_counter() - t0
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+    one_commit_run(False)  # compile the chunked trace
+    t_syncc = one_commit_run(False)
+    t_asyncc = one_commit_run(True)
+    out["async_commit_runs_per_s"] = n_runs / t_asyncc
+    out["async_commit_speedup"] = t_syncc / t_asyncc
     return out
 
 

@@ -28,15 +28,31 @@ Tree = Any
 _MARKER = "_COMPLETE"
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directories need an O_RDONLY fd;
+    works on the POSIX filesystems this repo targets)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def atomic_write_json(path: str, obj: Any) -> None:
-    """Write JSON through a temp file + rename so readers never observe a
-    partially-written file (shared by the checkpoint manifests and the
-    streaming results layer in ``core.results``).
+    """Write JSON through a temp file + fsync + rename so readers never
+    observe a partially-written file (shared by the checkpoint manifests and
+    the streaming results layer in ``core.results``).
 
     The temp name is unique per writer (mkstemp), not a fixed ``path.tmp``:
     multiple pods of a sharded sweep may race to create the same manifest
     with identical bytes, and a shared temp path would let one writer
     truncate the file under another mid-write — last rename wins instead.
+
+    Durability (DESIGN.md §11): the file is fsync'd BEFORE the rename and
+    the parent directory after it.  Rename-without-fsync lets a power loss
+    reorder the rename ahead of the data blocks — the classic
+    empty-but-renamed file — which would break the "presence == committed"
+    contract every reader of these files relies on.
     """
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                prefix=os.path.basename(path) + ".tmp.")
@@ -48,7 +64,10 @@ def atomic_write_json(path: str, obj: Any) -> None:
         os.fchmod(fd, 0o666 & ~umask)
         with os.fdopen(fd, "w") as f:
             json.dump(obj, f, indent=1, default=float)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_path(os.path.dirname(path) or ".")
     except BaseException:
         if os.path.exists(tmp):
             os.remove(tmp)
@@ -58,10 +77,23 @@ def atomic_write_json(path: str, obj: Any) -> None:
 def atomic_save_npz(path: str, arrays: dict[str, np.ndarray]) -> None:
     """Atomically commit an ``.npz`` bundle: the file either exists complete
     or not at all, so presence alone is the commit marker (the results-layer
-    shards rely on this — no ``_COMPLETE`` sidecar needed per shard)."""
+    shards rely on this — no ``_COMPLETE`` sidecar needed per shard).
+
+    Like ``atomic_write_json``, the bundle is fsync'd before the rename and
+    the parent directory after it, so a crash cannot surface a zero-byte or
+    truncated file under the committed name (DESIGN.md §11); a failure at
+    any point removes the temp file and leaves the committed name untouched.
+    """
     tmp = path + ".tmp.npz"
-    np.savez(tmp, **arrays)
-    os.replace(tmp, path)
+    try:
+        np.savez(tmp, **arrays)
+        _fsync_path(tmp)
+        os.replace(tmp, path)
+        _fsync_path(os.path.dirname(path) or ".")
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
 def _leaf_paths(tree: Tree):
@@ -94,9 +126,12 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Tree,
     atomic_write_json(os.path.join(tmp, "manifest.json"), manifest)
     with open(os.path.join(tmp, _MARKER), "w") as f:
         f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_path(ckpt_dir)
     return final
 
 

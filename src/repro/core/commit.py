@@ -1,0 +1,132 @@
+"""Background commit executor for the batched sweep (DESIGN.md §11).
+
+Every shard/checkpoint commit of ``core.sweep`` is host-side I/O on fully
+materialized numpy arrays — with the fsync'd atomic renames of
+``checkpoint.store`` it sits squarely on the sweep's critical path.  The
+``ChunkCommitter`` moves those commits onto ONE background worker thread so
+chunk N+1's device dispatch overlaps chunk N's npz write + fsync, without
+giving up any of the synchronous path's guarantees:
+
+  * **Span order is preserved.**  A single worker drains a FIFO queue, so
+    commits land on disk in exactly the submission order — the per-pod
+    committed-prefix resume rule (``results.pod_prefix_spans``) keeps
+    working because a later chunk can never become visible before an
+    earlier one of the same pod.
+  * **Bounded queue.**  ``submit`` blocks once ``max_pending`` commits are
+    in flight (queue + the one executing), so host memory holds at most a
+    few chunks of rows no matter how far the device runs ahead.
+  * **Exceptions are not lost.**  The first worker exception is re-raised
+    on the producer thread at the next ``submit``/``drain``/``close`` —
+    exactly where the synchronous path would have raised — and poisons the
+    queue: once a commit failed, later queued commits are dropped (never
+    executed), so a failed span can never be followed on disk by a
+    committed successor (which the prefix rule would silently orphan).
+  * **Drain on every exit.**  ``close`` (or the context manager, on normal
+    exit AND on ``KeyboardInterrupt``/any exception) waits for the queued
+    commits to finish before returning, so work that was handed over is
+    either durably committed or surfaced as an error — never silently
+    dropped mid-queue.
+
+The committer is a pure execution detail: ``SweepConfig.async_commit`` is
+never fingerprinted and the bytes it commits are identical to the
+synchronous path's (same arrays, same writer).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable
+
+__all__ = ["ChunkCommitter"]
+
+_STOP = object()
+
+
+class ChunkCommitter:
+    """Bounded single-worker executor for ordered commit callables.
+
+    Args:
+      max_pending: commits allowed in the queue before ``submit`` blocks
+        (backpressure).  The worker may hold one more in execution.
+    """
+
+    def __init__(self, max_pending: int = 2):
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._error: BaseException | None = None
+        self._closed = False
+        self.committed = 0   # commits that ran to completion
+        self.dropped = 0     # commits skipped after a poisoning failure
+        self._thread = threading.Thread(target=self._worker,
+                                        name="sweep-committer", daemon=True)
+        self._thread.start()
+
+    # -- worker ------------------------------------------------------------
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is _STOP:
+                self._q.task_done()
+                return
+            fn, args, kwargs = item
+            if self._error is None:
+                try:
+                    fn(*args, **kwargs)
+                    self.committed += 1
+                except BaseException as e:  # noqa: BLE001 — re-raised later
+                    self._error = e
+            else:
+                # poisoned: a failed span must not be followed by a
+                # committed successor
+                self.dropped += 1
+            self._q.task_done()
+
+    # -- producer side -----------------------------------------------------
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            raise self._error
+
+    def submit(self, fn: Callable[..., Any], *args, **kwargs) -> None:
+        """Enqueue one commit; blocks while ``max_pending`` are in flight.
+
+        Re-raises the first pending worker exception BEFORE enqueueing, so
+        the producer stops handing work to a failed pipeline at the same
+        boundary the synchronous path would have stopped at.
+        """
+        if self._closed:
+            raise RuntimeError("submit on a closed ChunkCommitter")
+        self._raise_pending()
+        self._q.put((fn, args, kwargs))
+
+    def drain(self, raise_errors: bool = True) -> None:
+        """Block until every queued commit has run (or been dropped); then
+        re-raise the first worker exception unless ``raise_errors=False``
+        (used while already unwinding another exception, to avoid masking
+        it)."""
+        self._q.join()
+        if raise_errors:
+            self._raise_pending()
+
+    def close(self, raise_errors: bool = True) -> None:
+        """Drain, stop the worker and join it.  Idempotent."""
+        if not self._closed:
+            self._closed = True
+            self._q.join()
+            self._q.put(_STOP)
+            self._thread.join()
+        if raise_errors:
+            self._raise_pending()
+
+    # -- context manager: drain on normal exit and on KeyboardInterrupt ----
+
+    def __enter__(self) -> "ChunkCommitter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # on an in-flight exception (KeyboardInterrupt included) still drain
+        # — handed-over commits finish — but don't let a worker error mask
+        # the original exception
+        self.close(raise_errors=exc_type is None)

@@ -1,0 +1,275 @@
+"""Island-model elite migration between sweep pods (DESIGN.md §11).
+
+The pod-sharded sweep (DESIGN.md §6) runs disjoint slices of the chunk plan
+with zero runtime coordination — pods never benefit from each other's
+discoveries.  This module adds the standard evolutionary island lever at the
+CHUNK level: the pod-sliced chunk sequence is cut into fixed *epochs* of
+``migrate_every`` chunks, and
+
+  * after finishing the last chunk of its own epoch ``g``, a pod publishes
+    its per-σ-group elite genomes as one fingerprint-stamped, atomically
+    committed ``migrants_pod{i}_gen{g}.npz`` under the shared
+    ``results_dir`` (``atomic_save_npz`` — presence == published, re-publish
+    after a crash/resume rewrites identical bytes, so it is idempotent);
+  * before running any chunk of epoch ``e >= 1``, a pod imports the epoch
+    ``e-1`` migrant files of EVERY pod whose slice contains a complete
+    epoch ``e-1`` (a deterministic function of the chunk plan — the import
+    set never depends on timing), waiting for laggards up to
+    ``migrate_timeout``;
+  * imported elites with the chunk's σ are merged under a deterministic
+    rule — sorted by ``(power_rel, phenotype digest)``, digest-deduplicated,
+    capped at ``MIGRATE_TOP_K`` — and folded into the chunk's INITIAL
+    population: each run adopts the migrant with the best Eq.(8)/(9) fitness
+    under its own thresholds iff that fitness is STRICTLY better than the
+    golden parent's (``fold_segment``, mirroring ``evolve._migrate``'s
+    strictly-worse adoption rule).
+
+Determinism: the import set is pinned by the plan, the merge key is
+content-based, and adoption is per-run argmin with first-index tie-breaks —
+so neither pod start order, file arrival order, nor concatenation order can
+change results.  Migration IS result-changing, so ``sweep.grid_fingerprint``
+gains a ``migrate`` key when (and only when) it is on; with
+``migrate_every=0`` fingerprints, shards and stdout are byte-identical to
+the migration-less engine.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import re
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import atomic_save_npz
+from repro.core.evolve import EvolveConfig, EvolveState
+from repro.core.fitness import fitness as fitness_fn
+from repro.core.genome import (CGPSpec, Genome, PHENOTYPE_DIGEST_SIZE,
+                               phenotype_digests)
+
+#: migrants kept per σ group per merge (publish caps per group too, so one
+#: migrant file holds at most top_k × σ-groups rows).  Part of the grid
+#: fingerprint's ``migrate`` key — changing it changes results.
+MIGRATE_TOP_K = 4
+
+_MIGRANT_RE = re.compile(r"^migrants_pod(\d+)_gen(\d+)\.npz$")
+
+
+def migrant_name(pod: int, gen: int) -> str:
+    return f"migrants_pod{pod}_gen{gen}.npz"
+
+
+def select_elites(nodes: np.ndarray, outs: np.ndarray, power_rel: np.ndarray,
+                  feas: np.ndarray, sigmas: np.ndarray, spec: CGPSpec,
+                  top_k: int = MIGRATE_TOP_K) -> dict[str, np.ndarray]:
+    """Per-σ-group elites of one epoch's committed rows, as migrant arrays.
+
+    Only rows feasible under their OWN run's constraints qualify (an
+    infeasible low-power genome is noise to every importer); per σ group the
+    survivors are sorted by ``(power_rel, digest)``, digest-deduplicated and
+    capped at ``top_k``.  Deterministic given the rows — publication order /
+    row order cannot change the output bytes.
+    """
+    digs = phenotype_digests(nodes, outs, spec)
+    picked: list[int] = []
+    for sig in sorted(set(float(s) for s in sigmas)):
+        cand = [i for i in range(len(sigmas))
+                if float(sigmas[i]) == sig and feas[i]]
+        cand.sort(key=lambda i: (float(power_rel[i]), digs[i]))
+        seen: set[bytes] = set()
+        for i in cand:
+            if digs[i] in seen:
+                continue
+            seen.add(digs[i])
+            picked.append(i)
+            if len(seen) == top_k:
+                break
+    idx = np.asarray(picked, dtype=np.int64)
+    dig_arr = np.frombuffer(b"".join(digs[i] for i in picked),
+                            dtype=np.uint8).reshape(len(picked),
+                                                    PHENOTYPE_DIGEST_SIZE) \
+        if picked else np.zeros((0, PHENOTYPE_DIGEST_SIZE), np.uint8)
+    return {
+        "sigma": np.asarray(sigmas, np.float32)[idx],
+        "nodes": np.asarray(nodes, np.int32)[idx],
+        "outs": np.asarray(outs, np.int32)[idx],
+        "power_rel": np.asarray(power_rel, np.float32)[idx],
+        "digest": dig_arr,
+    }
+
+
+class MigrationManager:
+    """One pod's migration endpoint: epoch bookkeeping, publish, import.
+
+    Args:
+      results_dir: the shared sweep directory migrant files live in.
+      pod: this pod's index.
+      pod_lens: per-pod slice lengths of the deterministic chunk plan
+        (``len(s) for s in pod_partition(chunks, n_pods)``) — they define
+        which pods publish which epochs, so the import set is a function of
+        the plan alone.
+      period: ``migrate_every`` — chunks per epoch.
+      fingerprint: the grid fingerprint every migrant file is stamped with
+        (imports refuse mismatches: stale files of another grid in a shared
+        directory are a config error, not data).
+      timeout: seconds to wait for a required peer file before raising.
+    """
+
+    def __init__(self, results_dir: str, pod: int, pod_lens: list[int],
+                 period: int, fingerprint: str, *, timeout: float = 120.0,
+                 top_k: int = MIGRATE_TOP_K, poll: float = 0.05):
+        self.results_dir = results_dir
+        self.pod = pod
+        self.pod_lens = list(pod_lens)
+        self.period = period
+        self.fingerprint = fingerprint
+        self.timeout = timeout
+        self.top_k = top_k
+        self.poll = poll
+        self.stats = {"published": 0, "imported": 0, "adopted": 0,
+                      "waited_s": 0.0}
+        self._epochs: dict[int, dict[str, np.ndarray]] = {}
+
+    # -- publish -----------------------------------------------------------
+
+    def epoch_of(self, pos: int) -> int:
+        """Epoch of a pod-slice position."""
+        return pos // self.period
+
+    def publishes_at(self, pos: int) -> int | None:
+        """The epoch completed at slice position ``pos`` (None if ``pos`` is
+        not an epoch boundary — partial trailing epochs are never
+        published, and never required by any importer)."""
+        return self.epoch_of(pos) if (pos + 1) % self.period == 0 else None
+
+    def maybe_publish(self, epoch: int, elites: dict[str, np.ndarray]
+                      ) -> str | None:
+        """Commit this pod's epoch file unless already present (resume:
+        re-deriving from committed shards yields identical bytes, so
+        skipping is purely an I/O save)."""
+        path = os.path.join(self.results_dir,
+                            migrant_name(self.pod, epoch))
+        if os.path.exists(path):
+            return None
+        out = dict(elites)
+        out["fingerprint"] = np.array(self.fingerprint)
+        out["epoch"] = np.array(epoch, np.int64)
+        out["pod"] = np.array(self.pod, np.int64)
+        atomic_save_npz(path, out)
+        self.stats["published"] += 1
+        return path
+
+    # -- import ------------------------------------------------------------
+
+    def publishers(self, epoch: int) -> list[int]:
+        """Pods whose slice contains a COMPLETE epoch ``epoch`` — the exact
+        file set every importer of epoch ``epoch`` waits for."""
+        need = (epoch + 1) * self.period
+        return [q for q, n in enumerate(self.pod_lens) if n >= need]
+
+    def _load_epoch(self, epoch: int) -> dict[str, np.ndarray]:
+        if epoch in self._epochs:
+            return self._epochs[epoch]
+        parts = []
+        for q in self.publishers(epoch):
+            path = os.path.join(self.results_dir, migrant_name(q, epoch))
+            deadline = time.monotonic() + self.timeout
+            while not os.path.exists(path):
+                if time.monotonic() >= deadline:
+                    raise RuntimeError(
+                        f"pod {self.pod}: migrant file {path!r} (epoch "
+                        f"{epoch}, pod {q}) still missing after "
+                        f"{self.timeout:.0f}s — is that pod running? "
+                        f"(relaunch it, raise migrate_timeout, or disable "
+                        f"migration)")
+                time.sleep(self.poll)
+                self.stats["waited_s"] += self.poll
+            with np.load(path) as z:
+                fp = str(z["fingerprint"][()])
+                if fp != self.fingerprint:
+                    raise ValueError(
+                        f"migrant file {path!r} stamped with a different "
+                        f"grid fingerprint ({fp[:12]}… != "
+                        f"{self.fingerprint[:12]}…) — stale file from "
+                        f"another grid in this results_dir")
+                parts.append({k: z[k] for k in
+                              ("sigma", "nodes", "outs", "power_rel",
+                               "digest")})
+        merged = {k: np.concatenate([p[k] for p in parts])
+                  for k in parts[0]} if parts else {
+            "sigma": np.zeros((0,), np.float32)}
+        self._epochs[epoch] = merged
+        return merged
+
+    def candidates(self, epoch: int, sigma: float
+                   ) -> tuple[np.ndarray, np.ndarray] | None:
+        """Merged ``(nodes, outs)`` import candidates of one σ group, in the
+        deterministic ``(power_rel, digest)`` order, deduplicated and capped
+        at ``top_k``; None when the epoch published nothing for this σ.
+
+        The sort key is content-based, so the concatenation order of the
+        pod files (and hence pod start order) cannot change the result.
+        """
+        mig = self._load_epoch(epoch)
+        rows = np.flatnonzero(mig["sigma"] == np.float32(sigma))
+        if rows.size == 0:
+            return None
+        order = sorted(
+            rows.tolist(),
+            key=lambda i: (float(mig["power_rel"][i]),
+                           mig["digest"][i].tobytes()))
+        seen: set[bytes] = set()
+        keep: list[int] = []
+        for i in order:
+            d = mig["digest"][i].tobytes()
+            if d in seen:
+                continue
+            seen.add(d)
+            keep.append(i)
+            if len(keep) == self.top_k:
+                break
+        self.stats["imported"] += len(keep)
+        return mig["nodes"][keep], mig["outs"][keep]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "cfg"))
+def fold_segment(spec: CGPSpec, cfg: EvolveConfig, state: EvolveState,
+                 mig_nodes: jax.Array, mig_outs: jax.Array,
+                 mig_mv: jax.Array, mig_pw: jax.Array, thr_mat: jax.Array
+                 ) -> tuple[EvolveState, jax.Array]:
+    """Fold evaluated migrants into a chunk's initial state.
+
+    ``mig_*`` carry a leading migrant axis (padded to a power-of-two bucket
+    by repeating row 0 — duplicates sit AFTER the real rows, so the
+    first-index ``argmin`` tie-break is unaffected).  Per run, the migrant
+    with the lowest Eq.(8)/(9) fitness under that run's thresholds replaces
+    the golden parent iff STRICTLY better (``evolve._migrate``'s
+    strictly-worse adoption rule); ``best``/``best_fit`` track it the same
+    way.  Returns the folded state and the number of adopting runs.
+    """
+    fits = jax.vmap(lambda t: jax.vmap(
+        lambda p, m: fitness_fn(p, m, t))(mig_pw, mig_mv))(thr_mat)  # (C, Mp)
+    j = jnp.argmin(fits, axis=1)                                     # (C,)
+    fbest = jnp.take_along_axis(fits, j[:, None], axis=1)[:, 0]
+    sel = Genome(mig_nodes[j], mig_outs[j])
+    take = fbest < state.parent_fit
+
+    def w(flag, a, b):
+        return jnp.where(flag.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+
+    parent = Genome(w(take, sel.nodes, state.parent.nodes),
+                    w(take, sel.outs, state.parent.outs))
+    improves = fbest < state.best_fit
+    best = Genome(w(improves, sel.nodes, state.best.nodes),
+                  w(improves, sel.outs, state.best.outs))
+    folded = EvolveState(
+        parent=parent,
+        parent_fit=jnp.where(take, fbest, state.parent_fit),
+        parent_metrics=w(take, mig_mv[j], state.parent_metrics),
+        parent_power=jnp.where(take, mig_pw[j], state.parent_power),
+        best=best,
+        best_fit=jnp.where(improves, fbest, state.best_fit),
+        key=state.key)
+    return folded, take.sum()

@@ -53,6 +53,8 @@ import json
 import os
 import re
 import shutil
+import sys
+import zipfile
 from typing import Iterator, Sequence
 
 import numpy as np
@@ -318,19 +320,51 @@ class SweepResultWriter:
         """Number of runs covered by the committed per-pod prefixes."""
         return sum(end - start for start, end in self.live_spans())
 
+    #: load/scatter failures ``restore`` treats as a damaged shard rather
+    #: than a bug: zero-byte or truncated files (BadZipFile/EOFError/
+    #: OSError/ValueError from ``np.load``), a missing or malformed member
+    #: (KeyError), out-of-range grid rows (IndexError)
+    _CORRUPT_ERRORS = (OSError, EOFError, ValueError, KeyError, IndexError,
+                       zipfile.BadZipFile)
+
+    def _quarantine(self, path: str, err: Exception) -> None:
+        """Move a damaged shard aside (``<name>.corrupt`` — no longer a
+        committed span) so the sweep re-runs and re-commits it instead of
+        crashing at restore time (DESIGN.md §11: a crash between the data
+        write and the directory fsync on a pre-fsync layer can legitimately
+        leave a truncated file under the committed name)."""
+        quarantined = path + ".corrupt"
+        os.replace(path, quarantined)
+        print(f"[results] quarantined damaged shard {path} -> "
+              f"{quarantined}: {type(err).__name__}: {err}",
+              file=sys.stderr, flush=True)
+
     def restore(self, bufs: dict[str, np.ndarray]) -> list[tuple[int, int]]:
         """Scatter the committed coverage into grid-order buffers in place
         (only keys present in ``bufs`` are touched) and return the covered
         spans — the sweep's resume point (each pod skips its own committed
-        prefix; other pods' spans pre-fill the result buffers)."""
-        live = self.live_spans()
-        for start, end in live:
-            with np.load(self._path(start, end)) as z:
-                rows = z["grid_rows"]
-                for key in bufs:
-                    if key in z:
-                        bufs[key][rows] = z[key]
-        return live
+        prefix; other pods' spans pre-fill the result buffers).
+
+        A zero-byte/truncated/unreadable shard is quarantined (renamed +
+        logged, see ``_quarantine``), its span drops out of the committed
+        coverage, and the scatter restarts over the recomputed coverage —
+        re-scattering a healthy shard is idempotent.
+        """
+        while True:
+            live = self.live_spans()
+            path = None
+            try:
+                for start, end in live:
+                    path = self._path(start, end)
+                    with np.load(path) as z:
+                        rows = z["grid_rows"]
+                        for key in bufs:
+                            if key in z:
+                                bufs[key][rows] = z[key]
+            except self._CORRUPT_ERRORS as e:
+                self._quarantine(path, e)
+                continue
+            return live
 
     def write_chunk(self, span: tuple[int, int],
                     rows: dict[str, np.ndarray]) -> str:

@@ -72,10 +72,12 @@ import numpy as np
 from repro.checkpoint import store
 from repro.core import certify
 from repro.core import metrics as M
+from repro.core import migrate as migrate_mod
 from repro.core import simulate
+from repro.core.commit import ChunkCommitter
 from repro.core.evalcache import PhenotypeLRU
 from repro.core.results import (SweepResultReader, SweepResultWriter,
-                                normalize_history_mode)
+                                normalize_history_mode, pod_partition)
 from repro.core.evolve import (EvolveConfig, eval_segment, init_state_batched,
                                make_batched_generation_step, mutate_segment,
                                scan_generations, select_segment)
@@ -152,6 +154,33 @@ class SweepConfig:
     counters come back on ``SweepResult.dedup_stats``.  Incompatible with
     ``model_axis`` (the dedup loop is host-driven; a cube-sharded dispatch
     is one fused program).
+
+    ``async_commit`` moves shard/checkpoint commits onto a bounded
+    single-worker background thread (``core.commit.ChunkCommitter``,
+    DESIGN.md §11): chunk N+1 dispatches while chunk N's npz write + fsync
+    runs off-thread.  Span order, the atomic-rename commit contract and
+    error surfacing are all preserved (worker exceptions re-raise at the
+    next submit/drain; the queue drains on every exit, ``KeyboardInterrupt``
+    included), and the committed BYTES are identical to the synchronous
+    path's — execution-only like ``layout``/``dedup``, never fingerprinted.
+    ``commit_depth`` bounds how many chunk commits may be pending before
+    the sweep loop blocks (host-memory backpressure).
+
+    ``migrate_every`` turns on chunk-level island migration between pods
+    (``core.migrate``, DESIGN.md §11): every ``migrate_every`` chunks of its
+    OWN slice a pod publishes its per-σ-group elites as an atomic
+    fingerprint-stamped ``migrants_pod{i}_gen{g}.npz`` under ``results_dir``,
+    and every chunk of epoch ``e >= 1`` folds the epoch ``e-1`` elites of
+    ALL publishing pods into its initial population under a deterministic
+    ``(power_rel, digest)`` merge rule.  RESULT-CHANGING — unlike
+    ``async_commit`` it joins the grid fingerprint (only when on, together
+    with ``n_pods``/``chunk_size``/``MIGRATE_TOP_K``, since the epoch
+    structure depends on the plan), so ``migrate_every=0`` fingerprints and
+    shards stay byte-identical to the migration-less engine.  Requires
+    ``results_dir`` (the migrant files ride the shared directory) and
+    refuses ``model_axis`` (the fold runs between host-driven jit
+    segments).  Importing waits up to ``migrate_timeout`` seconds for a
+    lagging pod's migrant file before raising.
     """
     chunk_size: int = 32          # runs per jit'd batch (device-memory bound)
     checkpoint_dir: str | None = None
@@ -165,11 +194,32 @@ class SweepConfig:
     layout: str | None = None     # Pallas grid-layout override (DESIGN.md §7)
     dedup: bool | None = None     # phenotype-dedup cache override (§8)
     dedup_cache_size: int = 1 << 16  # cross-generation LRU entry bound
+    async_commit: bool = False    # background shard/checkpoint commits (§11)
+    commit_depth: int = 2         # pending commits before submit blocks
+    migrate_every: int = 0        # chunks per migration epoch; 0 = off (§11)
+    migrate_timeout: float = 120.0  # seconds to wait for a peer's migrants
 
     def __post_init__(self):
         if self.dedup_cache_size < 1:
             raise ValueError(f"dedup_cache_size must be >= 1, got "
                              f"{self.dedup_cache_size}")
+        if self.commit_depth < 1:
+            raise ValueError(
+                f"commit_depth must be >= 1, got {self.commit_depth}")
+        if self.migrate_every < 0:
+            raise ValueError(
+                f"migrate_every must be >= 0, got {self.migrate_every}")
+        if self.migrate_every > 0:
+            if self.results_dir is None:
+                raise ValueError(
+                    "migrate_every needs a results_dir: migrant files ride "
+                    "the shared results directory (DESIGN.md §11)")
+            if self.model_axis is not None:
+                raise ValueError(
+                    "migrate_every is incompatible with model_axis: the "
+                    "migrant fold runs between host-driven jit segments, a "
+                    "cube-sharded dispatch is one fused program "
+                    "(DESIGN.md §11)")
         if self.layout not in (None, "auto", "genome_major", "cube_major"):
             raise ValueError(
                 f"layout must be None, 'auto', 'genome_major' or "
@@ -238,6 +288,9 @@ class SweepResult:
                                        # escalated elites for sampled ones
     certify_stats: dict | None = None  # escalation counters, when the
                                        # §10 escalation tier ran this call
+    migrate_stats: dict | None = None  # island-migration counters (§11):
+                                       # published/imported/adopted/waited_s,
+                                       # when chunk-level migration ran
 
     def reader(self) -> SweepResultReader:
         """Open the shard set this sweep streamed to (requires a
@@ -299,11 +352,30 @@ _init_state_batched_jit = jax.jit(
     init_state_batched, static_argnames=("spec", "cfg", "axis_name"))
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "cfg"))
+def evolve_chunk_seeded(spec: CGPSpec, cfg: EvolveConfig,
+                        state0: "jax.Array", thr_mat: jax.Array,
+                        in_planes: jax.Array, golden_vals: jax.Array,
+                        golden_power: jax.Array):
+    """``evolve_chunk`` from an EXPLICIT initial state (same generation scan,
+    same histories) — the migration path's entry point (DESIGN.md §11): the
+    driver builds ``state0`` via ``_init_state_batched_jit`` and optionally
+    folds imported migrant elites into it (``migrate.fold_segment``) before
+    the scan.  A migrating sweep routes EVERY chunk through this function —
+    epoch-0 chunks (nothing to import yet) included — so all chunks of a σ
+    group share one trace."""
+    batched_step = make_batched_generation_step(spec, cfg)
+    state, (hp, hm, hf) = scan_generations(batched_step, state0, thr_mat,
+                                           in_planes, golden_vals,
+                                           golden_power, cfg.generations)
+    return state, hp.T, jnp.swapaxes(hm, 0, 1), hf.T
+
+
 def _evolve_chunk_dedup(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
                         thr_mat: jax.Array, in_planes: jax.Array,
                         golden_vals: jax.Array, golden_power: jax.Array,
                         keys: jax.Array, cache: PhenotypeLRU,
-                        scope: tuple):
+                        scope: tuple, state0=None):
     """``evolve_chunk`` with the phenotype-dedup cache (DESIGN.md §8).
 
     The generation loop runs on the host so the dedup decision can happen in
@@ -319,11 +391,15 @@ def _evolve_chunk_dedup(spec: CGPSpec, cfg: EvolveConfig, golden: Genome,
     state and histories are bit-identical to ``evolve_chunk``'s.
 
     ``scope`` pins the cache entries' validity (grid fingerprint, σ); the
-    LRU itself lives across chunks of one sweep call.
+    LRU itself lives across chunks of one sweep call.  An explicit
+    ``state0`` (the migration path's folded initial state, DESIGN.md §11)
+    replaces the golden-parent init.
     """
     C, lam = thr_mat.shape[0], cfg.lam
-    state = _init_state_batched_jit(spec, cfg, golden, thr_mat, in_planes,
-                                    golden_vals, keys)
+    if state0 is None:
+        state0 = _init_state_batched_jit(spec, cfg, golden, thr_mat,
+                                         in_planes, golden_vals, keys)
+    state = state0
     stats = cache.stats
     hp, hm, hf = [], [], []
     for _ in range(cfg.generations):
@@ -466,10 +542,17 @@ def plan_chunks(sigmas: np.ndarray, chunk_size: int) -> list[tuple[int, int]]:
     return spans
 
 
-def grid_fingerprint(cfg, grid, keep_history: str | bool) -> str:
+def grid_fingerprint(cfg, grid, keep_history: str | bool,
+                     migrate: dict | None = None) -> str:
     """Identity of (problem, grid, history mode) — guards checkpoint resume
     AND the results-shard manifest (``core.results``).  The history mode is
-    part of the identity because it changes the buffer/shard schema."""
+    part of the identity because it changes the buffer/shard schema.
+
+    ``migrate`` carries the chunk-level island-migration knobs when (and
+    only when) migration is on (DESIGN.md §11) — migration is
+    result-changing and its epoch structure depends on the chunk plan and
+    pod partition, so they join the identity; ``None`` (migration off)
+    leaves every pre-§11 fingerprint unchanged."""
     ecfg = cfg.evolve
     # the legacy bool spellings hash as bools so checkpoints written before
     # the mode strings existed still resume ("summary" is new, no legacy)
@@ -503,6 +586,8 @@ def grid_fingerprint(cfg, grid, keep_history: str | bool) -> str:
         # pre-§10 sampled (and all exhaustive) fingerprints are unchanged
         if getattr(ecfg, "certify", False):
             ident["certify"] = {"budget": int(ecfg.certify_budget)}
+    if migrate:
+        ident["migrate"] = migrate
     return hashlib.sha256(json.dumps(ident, sort_keys=True,
                                      default=float).encode()).hexdigest()
 
@@ -643,7 +728,12 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
                 f"{None if mesh is None else mesh.axis_names})")
 
     bufs = _alloc_buffers(spec, n_runs, gens, mode)
-    fingerprint = grid_fingerprint(cfg, grid, mode)
+    migrating = sweep.migrate_every > 0
+    fingerprint = grid_fingerprint(
+        cfg, grid, mode,
+        migrate={"every": sweep.migrate_every, "n_pods": sweep.n_pods,
+                 "chunk_size": sweep.chunk_size,
+                 "top_k": migrate_mod.MIGRATE_TOP_K} if migrating else None)
     writer = None
     exec_done = np.zeros(n_runs, bool)  # execution-order positions covered
     if sweep.results_dir:
@@ -667,109 +757,220 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
     # the manifest-pinned plan is the single source of the pod partition
     my_chunks = chunks if sweep.n_pods == 1 else writer.pod_spans(pod)
 
+    # chunk-level island migration (DESIGN.md §11): the manager's epoch
+    # bookkeeping is a function of the deterministic plan alone, so every
+    # pod derives the same publish/import schedule with no coordination
+    migrator = None
+    if migrating:
+        pod_lens = [len(s) for s in pod_partition(chunks, sweep.n_pods)]
+        migrator = migrate_mod.MigrationManager(
+            sweep.results_dir, pod, pod_lens, sweep.migrate_every,
+            fingerprint, timeout=sweep.migrate_timeout)
+        mig_eval_cache: dict[tuple, tuple | None] = {}
+
+        def _publish_epoch(epoch: int) -> None:
+            # derived from the committed grid-order rows of the epoch's own
+            # spans — identical whether they ran just now or were restored
+            # from shards, so resume republishes identical bytes
+            spans = my_chunks[epoch * sweep.migrate_every:
+                              (epoch + 1) * sweep.migrate_every]
+            rows = np.concatenate([perm[s:e] for s, e in spans])
+            migrator.maybe_publish(epoch, migrate_mod.select_elites(
+                bufs["parent_nodes"][rows], bufs["parent_outs"][rows],
+                bufs["power_rel"][rows],
+                bufs["feasible"][rows].astype(bool), sigmas[rows], spec))
+
+        def _migrant_batch(epoch: int, sigma: float, ecfg):
+            # one import + evaluation per (epoch, σ); migrants are padded to
+            # a power-of-two bucket by repeating row 0 AFTER the real rows,
+            # so fold_segment's first-index argmin is unaffected
+            mkey = (epoch, float(sigma))
+            if mkey not in mig_eval_cache:
+                cand = migrator.candidates(epoch, sigma)
+                if cand is None:
+                    mig_eval_cache[mkey] = None
+                else:
+                    mn, mo = cand
+                    m = len(mn)
+                    pad_to = 1 << (m - 1).bit_length()
+                    rows = np.r_[np.arange(m),
+                                 np.zeros(pad_to - m, np.int64)]
+                    mn = jnp.asarray(mn[rows])
+                    mo = jnp.asarray(mo[rows])
+                    mmv, mpw = eval_segment(spec, ecfg, mn, mo, in_planes,
+                                            gvals)
+                    mig_eval_cache[mkey] = (mn, mo, mmv, mpw)
+            return mig_eval_cache[mkey]
+
+    # background commit pipeline (DESIGN.md §11): shard/checkpoint commits
+    # run on one bounded worker so the next chunk dispatches immediately;
+    # identical bytes, identical order, errors surface at the next submit
+    committer = (ChunkCommitter(sweep.commit_depth) if sweep.async_commit
+                 and (writer is not None or sweep.checkpoint_dir) else None)
+
+    def _commit_checkpoint(tree: dict, done: int) -> None:
+        store.save_checkpoint(sweep.checkpoint_dir, done, tree,
+                              {"done": done, "fingerprint": fingerprint})
+        store.cleanup(sweep.checkpoint_dir, keep=3)
+
     t0 = time.perf_counter()
     ran = chunks_run = 0
-    for start, end in my_chunks:
-        if exec_done[start:end].all():
-            continue  # committed by a previous (interrupted) sweep
-        if sweep.max_chunks is not None and chunks_run >= sweep.max_chunks:
-            break
-        n = end - start
-        pad = sweep.chunk_size - n
-        sel = perm[np.r_[start:end, np.full(pad, end - 1)]]  # pad: last run
-        orig = sel[:n]  # grid-order rows this chunk fills
-        sigma = float(sigmas[orig[0]])
-        ecfg = dataclasses.replace(cfg.evolve, gauss_sigma=sigma, seed=0)
-        if sweep.layout is not None:
-            ecfg = dataclasses.replace(ecfg, layout=sweep.layout)
+    try:
+        for pos, (start, end) in enumerate(my_chunks):
+            if exec_done[start:end].all():
+                # committed by a previous (interrupted) sweep; an epoch whose
+                # chunks were all restored may still owe its migrant file
+                # (crash between the last shard commit and the publish)
+                if migrator is not None and \
+                        migrator.publishes_at(pos) is not None:
+                    _publish_epoch(migrator.publishes_at(pos))
+                continue
+            if sweep.max_chunks is not None and \
+                    chunks_run >= sweep.max_chunks:
+                break
+            n = end - start
+            pad = sweep.chunk_size - n
+            sel = perm[np.r_[start:end, np.full(pad, end - 1)]]  # pad: last
+            orig = sel[:n]  # grid-order rows this chunk fills
+            sigma = float(sigmas[orig[0]])
+            ecfg = dataclasses.replace(cfg.evolve, gauss_sigma=sigma, seed=0)
+            if sweep.layout is not None:
+                ecfg = dataclasses.replace(ecfg, layout=sweep.layout)
 
-        if sweep.model_axis is not None:
-            evolve_call = _sharded_chunk_fn(ctx.get_mesh(), sweep.model_axis,
-                                            spec, ecfg)
-            state, hp, hm, hf = evolve_call(
-                gold.nodes, gold.outs, jnp.asarray(thr[sel]), in_planes,
-                gvals, gpower, jnp.asarray(keys[sel]))
-        elif dedup:
-            state, hp, hm, hf = _evolve_chunk_dedup(
-                spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
-                gpower, jnp.asarray(keys[sel]), cache,
-                (fingerprint, sigma) + sample_scope)
-        else:
-            state, hp, hm, hf = evolve_chunk(
-                spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes, gvals,
-                gpower, jnp.asarray(keys[sel]))
-        met, sterr, prel, feas, emean, estd = characterize_chunk(
-            spec, sigma, state.parent.nodes, state.parent.outs,
-            jnp.asarray(thr[sel]), in_planes, gvals, gpower,
-            sampled=sampled)
+            state0 = None
+            if migrator is not None:
+                # migration folds into an EXPLICIT initial state; every
+                # chunk of a migrating sweep takes the seeded path (epoch-0
+                # chunks included) so all chunks of a σ group share a trace
+                state0 = _init_state_batched_jit(
+                    spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes,
+                    gvals, jnp.asarray(keys[sel]))
+                ep = migrator.epoch_of(pos)
+                if ep >= 1:
+                    mb = _migrant_batch(ep - 1, sigma, ecfg)
+                    if mb is not None:
+                        mn, mo, mmv, mpw = mb
+                        state0, n_adopt = migrate_mod.fold_segment(
+                            spec, ecfg, state0, mn, mo, mmv, mpw,
+                            jnp.asarray(thr[sel]))
+                        migrator.stats["adopted"] += int(n_adopt)
 
-        nodes_np = np.asarray(state.parent.nodes)[:n]
-        outs_np = np.asarray(state.parent.outs)[:n]
-        met_np = np.asarray(met)[:n].copy()
-        sterr_np = np.asarray(sterr)[:n].copy()
-        feas_np = np.asarray(feas)[:n].astype(np.uint8)
-        cert = np.zeros(n, np.uint8)
-        if not sampled:
-            cert[:] = 1  # the census is its own certificate (§10)
-        elif certify_on:
-            # escalate the best sampled-feasible elites to the exact tier:
-            # their shard rows become certified-exact measurements
-            cap = policy.chunk_budget(plan_pos[(start, end)], len(chunks))
-            for r in certify.select_escalations(feas_np, np.asarray(prel)[:n],
-                                                cert, cap):
-                cmet = certify.certified_metrics(
-                    nodes_np[r], outs_np[r], spec, cfg.kind, cfg.width,
-                    sigma, dispatch_rows=policy.dispatch_rows)
-                met_np[r] = cmet
-                sterr_np[r] = 0.0  # no sampling error left to report
-                feas_np[r] = np.uint8(
-                    certify.feasible_np(cmet, thr[orig[r]]))
-                cert[r] = 1
-                n_escalated += 1
+            if sweep.model_axis is not None:
+                evolve_call = _sharded_chunk_fn(ctx.get_mesh(),
+                                                sweep.model_axis, spec, ecfg)
+                state, hp, hm, hf = evolve_call(
+                    gold.nodes, gold.outs, jnp.asarray(thr[sel]), in_planes,
+                    gvals, gpower, jnp.asarray(keys[sel]))
+            elif dedup:
+                state, hp, hm, hf = _evolve_chunk_dedup(
+                    spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes,
+                    gvals, gpower, jnp.asarray(keys[sel]), cache,
+                    (fingerprint, sigma) + sample_scope, state0=state0)
+            elif state0 is not None:
+                state, hp, hm, hf = evolve_chunk_seeded(
+                    spec, ecfg, state0, jnp.asarray(thr[sel]), in_planes,
+                    gvals, gpower)
+            else:
+                state, hp, hm, hf = evolve_chunk(
+                    spec, ecfg, gold, jnp.asarray(thr[sel]), in_planes,
+                    gvals, gpower, jnp.asarray(keys[sel]))
+            met, sterr, prel, feas, emean, estd = characterize_chunk(
+                spec, sigma, state.parent.nodes, state.parent.outs,
+                jnp.asarray(thr[sel]), in_planes, gvals, gpower,
+                sampled=sampled)
 
-        chunk_rows = {
-            "parent_nodes": nodes_np,
-            "parent_outs": outs_np,
-            "best_nodes": np.asarray(state.best.nodes)[:n],
-            "best_outs": np.asarray(state.best.outs)[:n],
-            "best_fit": np.asarray(state.best_fit)[:n],
-            "metrics": met_np,
-            "metrics_stderr": sterr_np,
-            "power_rel": np.asarray(prel)[:n],
-            "feasible": feas_np,
-            "certified_mask": cert,
-            "error_mean": np.asarray(emean)[:n],
-            "error_std": np.asarray(estd)[:n],
-        }
-        for key, rows in chunk_rows.items():
-            bufs[key][orig] = rows
-        if mode == "full":
-            bufs["hist_power_rel"][orig] = np.asarray(hp)[:n]
-            bufs["hist_fit"][orig] = np.asarray(hf)[:n]
-            bufs["hist_metrics"][orig] = np.asarray(hm)[:n]
-        if writer is not None:
-            chunk_rows["grid_rows"] = orig.astype(np.int32)
-            chunk_rows["thresholds"] = thr[orig]
-            if mode != "none":
-                # histories spill per chunk and (in "summary" mode) never
-                # touch a grid-sized host buffer
-                chunk_rows["hist_power_rel"] = np.asarray(hp)[:n]
-                chunk_rows["hist_fit"] = np.asarray(hf)[:n]
-                chunk_rows["hist_metrics"] = np.asarray(hm)[:n]
-            writer.write_chunk((start, end), chunk_rows)
+            nodes_np = np.asarray(state.parent.nodes)[:n]
+            outs_np = np.asarray(state.parent.outs)[:n]
+            met_np = np.asarray(met)[:n].copy()
+            sterr_np = np.asarray(sterr)[:n].copy()
+            feas_np = np.asarray(feas)[:n].astype(np.uint8)
+            cert = np.zeros(n, np.uint8)
+            if not sampled:
+                cert[:] = 1  # the census is its own certificate (§10)
+            elif certify_on:
+                # escalate the best sampled-feasible elites to the exact
+                # tier: their shard rows become certified-exact measurements
+                cap = policy.chunk_budget(plan_pos[(start, end)], len(chunks))
+                for r in certify.select_escalations(
+                        feas_np, np.asarray(prel)[:n], cert, cap):
+                    cmet = certify.certified_metrics(
+                        nodes_np[r], outs_np[r], spec, cfg.kind, cfg.width,
+                        sigma, dispatch_rows=policy.dispatch_rows)
+                    met_np[r] = cmet
+                    sterr_np[r] = 0.0  # no sampling error left to report
+                    feas_np[r] = np.uint8(
+                        certify.feasible_np(cmet, thr[orig[r]]))
+                    cert[r] = 1
+                    n_escalated += 1
 
-        exec_done[start:end] = True
-        ran += n
-        chunks_run += 1
-        if sweep.checkpoint_dir and (chunks_run % sweep.checkpoint_every == 0
-                                     or exec_done.all()):
-            # single-pod only (multi-pod refuses checkpoint_dir): coverage
-            # is a plain prefix, whose length is the checkpoint step
-            done = int(np.argmin(exec_done)) if not exec_done.all() \
-                else n_runs
-            store.save_checkpoint(sweep.checkpoint_dir, done, bufs,
-                                  {"done": done, "fingerprint": fingerprint})
-            store.cleanup(sweep.checkpoint_dir, keep=3)
+            chunk_rows = {
+                "parent_nodes": nodes_np,
+                "parent_outs": outs_np,
+                "best_nodes": np.asarray(state.best.nodes)[:n],
+                "best_outs": np.asarray(state.best.outs)[:n],
+                "best_fit": np.asarray(state.best_fit)[:n],
+                "metrics": met_np,
+                "metrics_stderr": sterr_np,
+                "power_rel": np.asarray(prel)[:n],
+                "feasible": feas_np,
+                "certified_mask": cert,
+                "error_mean": np.asarray(emean)[:n],
+                "error_std": np.asarray(estd)[:n],
+            }
+            for key, rows in chunk_rows.items():
+                bufs[key][orig] = rows
+            if mode == "full":
+                bufs["hist_power_rel"][orig] = np.asarray(hp)[:n]
+                bufs["hist_fit"][orig] = np.asarray(hf)[:n]
+                bufs["hist_metrics"][orig] = np.asarray(hm)[:n]
+            if writer is not None:
+                chunk_rows["grid_rows"] = orig.astype(np.int32)
+                chunk_rows["thresholds"] = thr[orig]
+                if mode != "none":
+                    # histories spill per chunk and (in "summary" mode)
+                    # never touch a grid-sized host buffer
+                    chunk_rows["hist_power_rel"] = np.asarray(hp)[:n]
+                    chunk_rows["hist_fit"] = np.asarray(hf)[:n]
+                    chunk_rows["hist_metrics"] = np.asarray(hm)[:n]
+                if committer is not None:
+                    # chunk_rows and its arrays are freshly built per chunk
+                    # and never mutated after this point — safe to hand to
+                    # the worker without copying
+                    committer.submit(writer.write_chunk, (start, end),
+                                     chunk_rows)
+                else:
+                    writer.write_chunk((start, end), chunk_rows)
+
+            exec_done[start:end] = True
+            ran += n
+            chunks_run += 1
+            if migrator is not None and \
+                    migrator.publishes_at(pos) is not None:
+                _publish_epoch(migrator.publishes_at(pos))
+            if sweep.checkpoint_dir and (
+                    chunks_run % sweep.checkpoint_every == 0
+                    or exec_done.all()):
+                # single-pod only (multi-pod refuses checkpoint_dir):
+                # coverage is a plain prefix, whose length is the step
+                done = int(np.argmin(exec_done)) if not exec_done.all() \
+                    else n_runs
+                if committer is not None:
+                    # snapshot: the loop keeps mutating bufs while the
+                    # worker serializes
+                    committer.submit(_commit_checkpoint,
+                                     {k: v.copy() for k, v in bufs.items()},
+                                     done)
+                else:
+                    _commit_checkpoint(bufs, done)
+    except BaseException:
+        # drain handed-over commits even while unwinding (KeyboardInterrupt
+        # included) so they are durably committed or dropped-after-poison,
+        # but never mask the in-flight exception with a worker's
+        if committer is not None:
+            committer.close(raise_errors=False)
+        raise
+    if committer is not None:
+        committer.close()
     dt = time.perf_counter() - t0
 
     done_mask = np.zeros(n_runs, bool)
@@ -814,4 +1015,5 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
             "certified_rows": int(bufs["certified_mask"].sum()),
             "budget": int(cfg.evolve.certify_budget),
         } if certify_on else None),
+        migrate_stats=dict(migrator.stats) if migrator is not None else None,
     )

@@ -141,6 +141,26 @@ def main():
     ap.add_argument("--pod-index", type=int, default=None,
                     help="which pod slice this process executes (default: "
                          "resolved from the active mesh / JAX process index)")
+    ap.add_argument("--async-commit", action="store_true",
+                    help="commit result shards / checkpoints on a bounded "
+                         "background thread so the next chunk dispatches "
+                         "while the previous one's npz write + fsync runs "
+                         "(DESIGN.md section 11).  Execution-only: committed "
+                         "bytes, order and crash guarantees are identical "
+                         "to the synchronous path")
+    ap.add_argument("--migrate-every", type=int, default=0,
+                    help="island-model elite migration between pods "
+                         "(DESIGN.md section 11): every N chunks of its own "
+                         "slice a pod publishes its per-sigma elite genomes "
+                         "to --results-dir, and later chunks fold the other "
+                         "pods' published elites into their initial "
+                         "population under a deterministic merge rule.  "
+                         "Result-changing (joins the grid fingerprint when "
+                         "on); 0 disables (default), keeping results "
+                         "byte-identical to the migration-less engine")
+    ap.add_argument("--migrate-timeout", type=float, default=120.0,
+                    help="seconds to wait for a lagging pod's migrant file "
+                         "before failing (default: 120)")
     ap.add_argument("--serial", action="store_true",
                     help="reference serial loop instead of the batched engine")
     args = ap.parse_args()
@@ -155,6 +175,15 @@ def main():
     if args.serial and args.certify:
         ap.error("--certify's escalation driver lives in the batched sweep "
                  "engine; drop --serial")
+    if args.serial and args.async_commit:
+        ap.error("--async-commit's background committer lives in the "
+                 "batched sweep engine; drop --serial")
+    if args.serial and args.migrate_every:
+        ap.error("--migrate-every lives in the batched sweep engine; drop "
+                 "--serial")
+    if args.migrate_every and not args.results_dir:
+        ap.error("--migrate-every needs a --results-dir: migrant files "
+                 "ride the shared results directory (DESIGN.md section 11)")
 
     cfg = SearchConfig(
         width=args.width, kind=args.kind, n_n=args.nodes,
@@ -183,7 +212,10 @@ def main():
                             keep_history=mode, layout=args.layout,
                             n_pods=args.pods, pod_index=pod,
                             dedup=args.dedup or None,
-                            dedup_cache_size=args.dedup_cache_size)
+                            dedup_cache_size=args.dedup_cache_size,
+                            async_commit=args.async_commit,
+                            migrate_every=args.migrate_every,
+                            migrate_timeout=args.migrate_timeout)
         result = run_sweep_batched(cfg, constraints, seeds=range(args.seeds),
                                    sweep=sweep)
         records = result.records
@@ -196,6 +228,14 @@ def main():
                   f"call, {st['certified_rows']}/{result.n_runs} rows "
                   f"certified exact (budget {st['budget']}/chunk)",
                   flush=True)
+        if args.migrate_every and result.migrate_stats is not None:
+            # only under --migrate-every, so migration-less stdout stays
+            # byte-identical to the pre-§11 CLI
+            st = result.migrate_stats
+            print(f"[evolve] migrate: {st['published']} epochs published, "
+                  f"{st['imported']} elites imported, {st['adopted']} runs "
+                  f"adopted a migrant ({st['waited_s']:.1f}s waiting on "
+                  f"peers)", flush=True)
         if args.dedup and result.dedup_stats is not None:
             st = result.dedup_stats
             print(f"[evolve] dedup cache: hit rate {st['hit_rate']:.1%} "

@@ -126,6 +126,65 @@ print('POD-SWEEP-OK', len(shards))
 
 
 @pytest.mark.slow
+def test_pod_mesh_migration_pod_order_independent():
+    """ISSUE 9 acceptance: island migration on a forced 2-pod CPU mesh is
+    deterministic and pod-start-order independent — both interleavings of
+    the two pod slices converge to byte-identical shard AND migrant files
+    (the import schedule is pinned by the chunk plan, the merge rule is
+    content-based)."""
+    out = run_subprocess("""
+import sys, os, tempfile; sys.path.insert(0, 'src')
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec
+from repro.core.search import SearchConfig
+from repro.core.sweep import SweepConfig, run_sweep_batched
+from repro.launch.mesh import make_sweep_mesh
+from repro.parallel import ctx
+
+CFG = SearchConfig(width=2, kind='add', n_n=40,
+                   evolve=EvolveConfig(generations=40, lam=3))
+CONS = [ConstraintSpec(mae=1.0), ConstraintSpec(mae=2.0),
+        ConstraintSpec(er=50.0)]
+N_RUNS = 6  # chunk_size 2 -> 3 chunks, pod slices [2, 1]
+
+def drive(d, order):
+    # one epoch (max_chunks == migrate_every) per leg, pods alternating —
+    # the single-process stand-in for concurrently progressing pods
+    done = {}
+    for _ in range(4):
+        for pod in order:
+            done[pod] = run_sweep_batched(CFG, CONS, (0, 1), SweepConfig(
+                chunk_size=2, keep_history='summary', results_dir=d,
+                n_pods=2, pod_index=pod, max_chunks=1, migrate_every=1,
+                migrate_timeout=30.0))
+            if len(done) == 2 and all(
+                    r.completed == N_RUNS for r in done.values()):
+                return done[pod]
+    raise AssertionError('pods never drained: %r' %
+                         {p: r.completed for p, r in done.items()})
+
+da, db = tempfile.mkdtemp(), tempfile.mkdtemp()
+mesh = make_sweep_mesh(pods=2)
+with ctx.use_mesh(mesh):
+    last = drive(da, (0, 1))
+    drive(db, (1, 0))
+assert last.migrate_stats is not None
+files = sorted(f for f in os.listdir(da)
+               if f.startswith(('shard_', 'migrants_')))
+assert files == sorted(f for f in os.listdir(db)
+                       if f.startswith(('shard_', 'migrants_')))
+assert any(f.startswith('migrants_pod0_') for f in files)
+assert any(f.startswith('migrants_pod1_') for f in files)
+for f in files:
+    a = open(os.path.join(da, f), 'rb').read()
+    b = open(os.path.join(db, f), 'rb').read()
+    assert a == b, f'bytes differ across pod orders: {f}'
+print('MIGRATE-MESH-OK', len(files))
+""", devices=2)
+    assert "MIGRATE-MESH-OK" in out
+
+
+@pytest.mark.slow
 def test_model_sharded_sweep_dispatch_matches_unsharded():
     """SweepConfig.model_axis: the (chunk × λ) dispatch with the input cube
     shard_map'd over the model axis (evaluation partials psum through the

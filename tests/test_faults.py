@@ -1,0 +1,294 @@
+"""Crash-consistency fault injection for the sweep pipeline (DESIGN.md §11).
+
+Every test injects a fault at a distinct crash point of the commit path —
+rename failures, a poisoned background committer, KeyboardInterrupt between
+chunks, a hard process kill mid-commit, damaged shards at restore, a
+checkpoint-commit crash, a lost migrant publish — and then proves the §11
+contract: no partial shard is ever visible under a committed name, coverage
+never references an uncommitted span, and a resumed sweep reproduces the
+uninterrupted reference BYTE for byte.
+
+Marked ``faults``: out of the tier-1 default (pytest.ini addopts), run by
+``make test-full`` and the CI faults leg.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro.checkpoint.store as store_mod
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec
+from repro.core.results import SweepResultReader
+from repro.core.search import SearchConfig
+from repro.core.sweep import SweepConfig, run_sweep_batched
+
+pytestmark = pytest.mark.faults
+
+CFG = SearchConfig(width=2, kind="add", n_n=40,
+                   evolve=EvolveConfig(generations=40, lam=3))
+CONSTRAINTS = [ConstraintSpec(mae=1.0), ConstraintSpec(mae=2.0),
+               ConstraintSpec(er=50.0)]
+SEEDS = (0, 1)
+N_RUNS = len(CONSTRAINTS) * len(SEEDS)  # chunk_size 2 -> 3 chunks
+
+
+def _sweep(results_dir, **kw):
+    sweep = SweepConfig(chunk_size=2, keep_history="summary",
+                        results_dir=str(results_dir), **kw)
+    return run_sweep_batched(CFG, CONSTRAINTS, SEEDS, sweep)
+
+
+def _shards(d):
+    return sorted(f for f in os.listdir(d) if f.startswith("shard_")
+                  and f.endswith(".npz") and ".tmp." not in f)
+
+
+def _shard_bytes(d):
+    return {f: open(os.path.join(d, f), "rb").read() for f in _shards(d)}
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """The uninterrupted sweep every crashed-then-resumed run must match."""
+    d = tmp_path_factory.mktemp("reference")
+    res = _sweep(d)
+    assert res.completed == N_RUNS
+    return str(d)
+
+
+def _assert_resumes_to_reference(crash_dir, reference):
+    res = _sweep(crash_dir)
+    assert res.completed == N_RUNS
+    a, b = _shard_bytes(reference), _shard_bytes(str(crash_dir))
+    assert sorted(a) == sorted(b)
+    for name in a:
+        assert a[name] == b[name], f"shard bytes differ after resume: {name}"
+
+
+def _failing_replace(monkeypatch, nth, exc=OSError("injected: disk gone")):
+    """Make the ``nth`` shard-commit rename raise — the instant between a
+    fully-written tmp file and its atomic publication."""
+    orig = os.replace
+    seen = []
+
+    def bomb(src, dst):
+        if os.path.basename(dst).startswith("shard_"):
+            seen.append(dst)
+            if len(seen) == nth:
+                raise exc
+        return orig(src, dst)
+
+    monkeypatch.setattr(os, "replace", bomb)
+    return seen
+
+
+# --------------------------------------------------------------------------
+# Crash point 1: rename fails during a synchronous shard commit
+# --------------------------------------------------------------------------
+
+def test_sync_commit_rename_crash_then_resume(tmp_path, monkeypatch, reference):
+    _failing_replace(monkeypatch, nth=2)
+    with pytest.raises(OSError, match="injected"):
+        _sweep(tmp_path)
+    monkeypatch.undo()
+    # the failed span is invisible: one committed shard, no tmp debris
+    assert len(_shards(tmp_path)) == 1
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp.npz")]
+    assert len(SweepResultReader(str(tmp_path)).spans()) == 1
+    _assert_resumes_to_reference(tmp_path, reference)
+
+
+# --------------------------------------------------------------------------
+# Crash point 2: the BACKGROUND committer fails mid-queue — the error
+# surfaces on the producer and poisons every later queued commit
+# --------------------------------------------------------------------------
+
+def test_async_commit_failure_poisons_queue(tmp_path, monkeypatch, reference):
+    _failing_replace(monkeypatch, nth=2)
+    with pytest.raises(OSError, match="injected"):
+        _sweep(tmp_path, async_commit=True, commit_depth=1)
+    monkeypatch.undo()
+    # a failed span must never be FOLLOWED by a committed one (the prefix
+    # coverage rule would silently orphan the gap): shard 3 was dropped
+    committed = _shards(tmp_path)
+    assert len(committed) == 1
+    assert len(SweepResultReader(str(tmp_path)).spans()) == 1
+    _assert_resumes_to_reference(tmp_path, reference)
+
+
+# --------------------------------------------------------------------------
+# Crash point 3: KeyboardInterrupt between chunks of an async sweep — the
+# handed-over commits drain before the interrupt propagates
+# --------------------------------------------------------------------------
+
+def test_async_keyboard_interrupt_drains_then_resumes(tmp_path, monkeypatch,
+                                                      reference):
+    import repro.core.sweep as sweep_mod
+    real = sweep_mod.characterize_chunk
+    calls = []
+
+    def interrupted(*args, **kw):
+        calls.append(1)
+        if len(calls) == 3:  # chunks 1-2 finished, their commits may still
+            raise KeyboardInterrupt  # be queued on the committer
+        return real(*args, **kw)
+
+    monkeypatch.setattr(sweep_mod, "characterize_chunk", interrupted)
+    with pytest.raises(KeyboardInterrupt):
+        _sweep(tmp_path, async_commit=True)
+    monkeypatch.undo()
+    # both finished chunks were durably committed on the way out
+    assert len(_shards(tmp_path)) == 2
+    ref = _shard_bytes(reference)
+    for name, blob in _shard_bytes(str(tmp_path)).items():
+        assert blob == ref[name]
+    _assert_resumes_to_reference(tmp_path, reference)
+
+
+# --------------------------------------------------------------------------
+# Crash point 4: hard process kill (os._exit) after the tmp file is written
+# but before the rename — no partial shard may be visible to a reader
+# --------------------------------------------------------------------------
+
+def test_hard_kill_mid_commit_subprocess(tmp_path, reference):
+    code = f"""
+import os
+orig = os.replace
+seen = []
+def bomb(src, dst):
+    if os.path.basename(dst).startswith("shard_"):
+        seen.append(dst)
+        if len(seen) == 2:
+            os._exit(3)  # power loss: tmp written, never published
+    return orig(src, dst)
+os.replace = bomb
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec
+from repro.core.search import SearchConfig
+from repro.core.sweep import SweepConfig, run_sweep_batched
+cfg = SearchConfig(width=2, kind="add", n_n=40,
+                   evolve=EvolveConfig(generations=40, lam=3))
+cons = [ConstraintSpec(mae=1.0), ConstraintSpec(mae=2.0),
+        ConstraintSpec(er=50.0)]
+run_sweep_batched(cfg, cons, (0, 1),
+                  SweepConfig(chunk_size=2, keep_history="summary",
+                              results_dir={str(tmp_path)!r}))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, "-W", "ignore", "-c", code],
+                         capture_output=True, text=True, timeout=600, env=env)
+    assert out.returncode == 3, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    # the killed commit left at most tmp debris, never a committed name
+    assert len(_shards(tmp_path)) == 1
+    reader = SweepResultReader(str(tmp_path))
+    assert len(reader.spans()) == 1  # coverage excludes the uncommitted span
+    _assert_resumes_to_reference(tmp_path, reference)
+
+
+# --------------------------------------------------------------------------
+# Crash points 5+6: a committed-name shard damaged at rest (zero-byte /
+# truncated — e.g. pre-§11 rename-without-fsync after power loss) is
+# quarantined at restore, logged, and its span re-run
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("damage", ["zero", "truncated"])
+def test_damaged_shard_quarantined_and_rerun(tmp_path, reference, damage,
+                                             capsys):
+    _sweep(tmp_path)
+    victim = _shards(tmp_path)[1]
+    path = os.path.join(str(tmp_path), victim)
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(b"" if damage == "zero" else blob[:len(blob) // 2])
+    res = _sweep(tmp_path)
+    assert res.completed == N_RUNS
+    err = capsys.readouterr().err
+    assert "quarantined damaged shard" in err
+    assert os.path.exists(path + ".corrupt")  # evidence kept, span dropped
+    a, b = _shard_bytes(reference), _shard_bytes(str(tmp_path))
+    assert sorted(a) == sorted(b)
+    for name in a:
+        assert a[name] == b[name]
+
+
+# --------------------------------------------------------------------------
+# Crash point 7: checkpoint-commit crash — the previous committed step
+# remains the resume point and the finished grid matches the reference
+# --------------------------------------------------------------------------
+
+def test_checkpoint_commit_crash_then_resume(tmp_path, monkeypatch):
+    ck = str(tmp_path / "ck")
+    want = run_sweep_batched(
+        CFG, CONSTRAINTS, SEEDS,
+        SweepConfig(chunk_size=2, checkpoint_dir=str(tmp_path / "ref")))
+    orig = os.rename
+    seen = []
+
+    def bomb(src, dst):
+        if os.path.basename(dst).startswith("step_"):
+            seen.append(dst)
+            if len(seen) == 2:
+                raise OSError("injected: checkpoint rename lost")
+        return orig(src, dst)
+
+    monkeypatch.setattr(os, "rename", bomb)
+    with pytest.raises(OSError, match="injected"):
+        run_sweep_batched(CFG, CONSTRAINTS, SEEDS,
+                          SweepConfig(chunk_size=2, checkpoint_dir=ck))
+    monkeypatch.undo()
+    assert len(store_mod.committed_steps(ck)) == 1  # step 2 never visible
+    res = run_sweep_batched(CFG, CONSTRAINTS, SEEDS,
+                            SweepConfig(chunk_size=2, checkpoint_dir=ck))
+    assert res.completed == N_RUNS
+    np.testing.assert_array_equal(res.metrics, want.metrics)
+    np.testing.assert_array_equal(res.power_rel, want.power_rel)
+    np.testing.assert_array_equal(res.best_fit, want.best_fit)
+
+
+# --------------------------------------------------------------------------
+# Crash point 8: migrant publish lost after the epoch's shards committed —
+# the resumed pod republishes identical bytes from the restored rows
+# --------------------------------------------------------------------------
+
+def test_lost_migrant_publish_republished_identically(tmp_path):
+    res = _sweep(tmp_path, migrate_every=1)
+    assert res.completed == N_RUNS
+    migrants = sorted(f for f in os.listdir(tmp_path)
+                      if f.startswith("migrants_"))
+    assert migrants
+    victim = os.path.join(str(tmp_path), migrants[0])
+    want = open(victim, "rb").read()
+    os.remove(victim)  # crash between last shard commit and the publish
+    res = _sweep(tmp_path, migrate_every=1)
+    assert res.completed == N_RUNS
+    assert open(victim, "rb").read() == want
+
+
+# --------------------------------------------------------------------------
+# Durability regression: data reaches disk BEFORE the rename publishes it
+# --------------------------------------------------------------------------
+
+def test_atomic_writers_fsync_before_rename(tmp_path, monkeypatch):
+    events = []
+    orig_fsync, orig_replace = os.fsync, os.replace
+    monkeypatch.setattr(os, "fsync",
+                        lambda fd: (events.append("fsync"), orig_fsync(fd))[1])
+    monkeypatch.setattr(
+        os, "replace",
+        lambda s, d: (events.append("replace"), orig_replace(s, d))[1])
+
+    store_mod.atomic_save_npz(str(tmp_path / "a.npz"),
+                              {"x": np.arange(4)})
+    # tmp-file fsync strictly before the publishing rename, dir fsync after
+    assert events.index("fsync") < events.index("replace") < len(events) - 1
+    assert events.count("fsync") >= 2
+
+    events.clear()
+    store_mod.atomic_write_json(str(tmp_path / "a.json"), {"k": 1})
+    assert events.index("fsync") < events.index("replace") < len(events) - 1
+    assert events.count("fsync") >= 2

@@ -35,9 +35,10 @@ SOURCE_DIRS = ["src", "benchmarks", "examples", "tests", "tools"]
 # top-level DESIGN.md sections that must exist (docstring references point
 # into these; §6 is the multi-host sweep surface, §7 the kernel-layout /
 # tuning surface, §8 the phenotype-dedup evaluation cache, §9 the sampled
-# evaluation mode, §10 the exact-verification escalation tier)
+# evaluation mode, §10 the exact-verification escalation tier, §11 the
+# async commit pipeline + island migration)
 REQUIRED_DESIGN_SECTIONS = ["§1", "§2", "§3", "§4", "§5", "§6", "§7", "§8",
-                            "§9", "§10"]
+                            "§9", "§10", "§11"]
 
 # argparse-bearing entry points that must answer --help (quickstart.py is
 # deliberately absent: it has no CLI and would run the full search)
@@ -61,7 +62,9 @@ REQUIRED_FLAGS = {
     ("-m", "repro.launch.evolve"): ["--layout", "--backend", "--dedup",
                                     "--dedup-cache-size", "--eval-mode",
                                     "--sample-size", "--input-dist",
-                                    "--certify", "--certify-budget"],
+                                    "--certify", "--certify-budget",
+                                    "--async-commit", "--migrate-every",
+                                    "--migrate-timeout"],
     ("-m", "benchmarks.kernel_micro"): ["--layout", "--tune", "--json",
                                         "--smoke"],
     ("tools/check_bench.py",): ["--baseline", "--max-regression"],
