@@ -25,15 +25,15 @@ test-fast:
 	$(PY) -m pytest -x -q -m "not slow and not kernel_diff"
 
 bench-smoke:
-	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results,certify
+	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results,certify,lut
 
 bench-check:
-	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results,certify --smoke \
+	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results,certify,lut --smoke \
 		--json $(BENCH_JSON)
 	$(PY) tools/check_bench.py $(BENCH_JSON)
 
 bench-baseline:
-	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results,certify --smoke \
+	$(PY) -m benchmarks.kernel_micro --only sweep,gen,results,certify,lut --smoke \
 		--json benchmarks/bench_baseline.json
 
 docs-check:

@@ -8,7 +8,7 @@ traffic the cube-major layout removes).
 
 Script / module mode (CWD-independent):
   python -m benchmarks.kernel_micro \
-      [--only eval,gen,pallas,sweep,results,certify]
+      [--only eval,gen,pallas,sweep,results,certify,lut]
       [--backend jnp,pallas] [--layout genome_major,cube_major]
       [--smoke] [--json BENCH_out.json]
 
@@ -381,6 +381,43 @@ def bench_certify(width: int = 8, n_elites: int = 6, rate: float = 0.02,
     }
 
 
+def bench_lut(m: int = 256, n: int = 256, k: int = 256,
+              serve_requests: int = 3, serve_prompt: int = 16,
+              serve_gen: int = 8, reps: int = 3):
+    """The deployment bridge (DESIGN.md §12): LUT-matmul + approx serving.
+
+    ``lut_matmul_gops`` times the padded Pallas kernel path
+    (``kernels.ops.lut_matmul``; interpret mode on CPU — like the ``pallas``
+    leg, a reference number, not the TPU story) and ``lut_ref_gops_info``
+    the jnp gather oracle (what CPU serving actually dispatches to); both
+    count 2·M·N·K ops.  The oracle key carries the ``_info`` suffix so
+    ``check_bench`` reports it without gating it: XLA's CPU gather timing
+    swings several-× with machine state, and the serving path it feeds is
+    already gated end to end by ``serve_approx_tokens_per_s`` — the
+    continuous-batching serve loop on a reduced arch with every projection
+    matmul routed through an approximate LUT.
+    """
+    rng = np.random.default_rng(0)
+    lut = (np.arange(256)[:, None] * np.arange(256)[None, :]
+           + rng.integers(-2, 3, (256, 256))).astype(np.int32)  # approx LUT
+    a = jnp.asarray(rng.integers(0, 256, (m, k)), jnp.int32)
+    b = jnp.asarray(rng.integers(0, 256, (k, n)), jnp.int32)
+    lj = jnp.asarray(lut)
+    gops = 2.0 * m * n * k / 1e9
+    t_kernel = _time(lambda: ops.lut_matmul(a, b, lj), reps=reps)
+    t_ref = _time(lambda: ref.lut_matmul_ref(a, b, lj), reps=reps)
+
+    from repro.launch.serve import serve
+    sv = serve("llama3_2_1b", n_requests=serve_requests,
+               prompt_len=serve_prompt, gen_len=serve_gen, slots=2,
+               reduced=True, approx_lut=lut)
+    return {
+        "lut_matmul_gops": gops / t_kernel,
+        "lut_ref_gops_info": gops / t_ref,
+        "serve_approx_tokens_per_s": sv["tok_per_s"],
+    }
+
+
 # --smoke budget overrides per bench: the CI bench-gate size (seconds, not
 # minutes, per bench; small enough for every push, big enough to time)
 SMOKE = {
@@ -392,6 +429,8 @@ SMOKE = {
                   sampled_gens=5, sampled_size=2048),
     "results": dict(n_runs=512, gens=128, chunk=64),
     "certify": dict(width=6, n_elites=4, chunk_rows=1024),
+    "lut": dict(m=128, n=128, k=128, serve_requests=2, serve_prompt=8,
+                serve_gen=4, reps=6),
 }
 
 
@@ -429,7 +468,8 @@ def main(argv=None):
     import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: eval,gen,pallas,sweep,results,certify")
+                    help="comma list: "
+                         "eval,gen,pallas,sweep,results,certify,lut")
     ap.add_argument("--backend", default="jnp,pallas",
                     help="comma list of sweep-engine backends to time "
                          "(--only sweep axis; default: jnp,pallas)")
@@ -477,7 +517,8 @@ def main(argv=None):
                "sweep": functools.partial(bench_sweep, backends=backends,
                                           layouts=layouts),
                "results": bench_results,
-               "certify": bench_certify}
+               "certify": bench_certify,
+               "lut": bench_lut}
     if only is not None and (unknown := only - set(benches)):
         ap.error(f"unknown bench name(s): {sorted(unknown)} "
                  f"(choose from {sorted(benches)})")

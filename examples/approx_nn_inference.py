@@ -1,43 +1,47 @@
 """Deploy an evolved approximate multiplier inside an LM (paper ref. [4]'s
 use case, the motivation for the ACC0 metric).
 
-    PYTHONPATH=src python examples/approx_nn_inference.py
+    python examples/approx_nn_inference.py --registry /path/to/registry
 
-1. Evolves an 8x8 approximate multiplier under MAE+ER (+ACC0) constraints.
-2. Builds its 256x256 product LUT (``core.library.multiplier_lut``) — on
-   silicon this circuit replaces the MAC multipliers; here the LUT
-   *emulates* it exactly.
-3. Runs a small transformer with every projection matmul routed through the
-   emulated approximate arithmetic (models/quant.py) and reports the
-   model-level degradation (logit error / perplexity delta) vs exact fp32
-   and vs exact-int8.
+Consumes a fingerprinted circuit artifact from the registry a sweep exported
+(``launch.evolve --export-artifacts`` / ``python -m repro.launch.export``,
+DESIGN.md §12): the artifact's LUT is digest-verified and replayed from its
+genome, then a small transformer runs with every projection matmul routed
+through the emulated approximate arithmetic (models/quant.py), reporting the
+model-level degradation (perplexity delta) vs exact fp32 and vs exact-int8.
+
+Without ``--registry``/``--artifact`` the demo falls back to evolving a
+fresh 8×8 multiplier inline (``--evolve``-equivalent; slower, and the
+circuit is neither certified nor registered) so the example stays
+self-contained.
 """
+import argparse
 import dataclasses
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
-from repro.core.evolve import EvolveConfig
-from repro.core.fitness import ConstraintSpec
-from repro.core.genome import CGPSpec
-from repro.core.library import multiplier_lut
-from repro.core.search import SearchConfig, run_search
-from repro.models import model as M
-from repro.models import quant
-
 
 def perplexity(params, toks, cfg):
+    from repro.models import model as M
     loss = M.lm_loss(params, toks, toks, cfg)
     return float(jnp.exp(loss))
 
 
-def main():
-    # 1. evolve the circuit (short budget; use launch.evolve for real runs)
+def evolve_inline():
+    """Fallback: evolve an 8x8 multiplier here (short budget; use
+    launch.evolve + the artifact registry for real runs)."""
+    from repro.core.evolve import EvolveConfig
+    from repro.core.fitness import ConstraintSpec
+    from repro.core.genome import CGPSpec, Genome
+    from repro.core.library import multiplier_lut
+    from repro.core.search import SearchConfig, run_search
     scfg = SearchConfig(width=8, n_n=400,
                         evolve=EvolveConfig(generations=600, lam=8))
     con = ConstraintSpec(mae=0.1, er=95.0, acc0=True)
@@ -45,22 +49,52 @@ def main():
     rec, _ = run_search(scfg, con, seed=0)
     print(f"  feasible={rec.feasible} power_rel={rec.power_rel:.3f} "
           f"mae={rec.metrics[0]:.4f}% er={rec.metrics[2]:.1f}%")
-
-    # 2. deployment artifact
-    from repro.core.library import record_to_genome
-    genome = __import__("repro.core.genome", fromlist=["Genome"]).Genome(
-        jnp.asarray(rec.genome_nodes), jnp.asarray(rec.genome_outs))
+    genome = Genome(jnp.asarray(rec.genome_nodes),
+                    jnp.asarray(rec.genome_outs))
     lut = multiplier_lut(genome, CGPSpec(16, 16, 400))
+    return lut, rec.power_rel, con.describe()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Model-level degradation study of an evolved "
+                    "approximate multiplier (registry artifact or inline "
+                    "evolution).")
+    ap.add_argument("--artifact", default=None,
+                    help="registry artifact .npz to deploy (digest-verified "
+                         "+ genome-replayed before use)")
+    ap.add_argument("--registry", default=None,
+                    help="registry directory; the lowest-power feasible "
+                         "artifact is selected")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ModelConfig
+    from repro.models import model as M
+    from repro.models import quant
+
+    # 1. the deployment artifact: registry-verified, or evolved inline
+    if args.artifact or args.registry:
+        from repro.core.artifacts import resolve_artifact
+        art = resolve_artifact(args.artifact or args.registry)
+        lut, power_rel, constraint = art.lut, art.power_rel, art.constraint
+        print(f"artifact {art.path}: {constraint} (seed {art.seed}, "
+              f"power_rel={power_rel:.3f}, certified={art.certified}, "
+              f"digest {art.digest[:12]}...)")
+    else:
+        lut, power_rel, constraint = evolve_inline()
+
     exact = np.arange(256)[:, None] * np.arange(256)[None, :]
     print(f"  LUT mean |err| = {np.abs(lut - exact).mean():.2f} "
           f"(of max product 65025)")
 
-    # 3. model-level impact
+    # 2. model-level impact
     cfg = ModelConfig(name="toy", n_layers=2, d_model=64, n_heads=4,
                       n_kv_heads=2, d_ff=128, vocab=256)
     key = jax.random.PRNGKey(0)
     params = M.init_params(key, cfg)
-    toks = jax.random.randint(key, (4, 64), 0, cfg.vocab)
+    toks = jax.random.randint(key, (args.batch, args.seq_len), 0, cfg.vocab)
 
     ppl_fp = perplexity(params, toks, cfg)
     cfg_q = dataclasses.replace(cfg, approx_matmul=True)
@@ -76,9 +110,12 @@ def main():
           f"(quantization cost {100 * (ppl_int8 / ppl_fp - 1):+.2f}%)")
     print(f"perplexity  approx-mult: {ppl_approx:.4f} "
           f"(total cost {100 * (ppl_approx / ppl_fp - 1):+.2f}%)")
-    print(f"\n=> the evolved circuit at {rec.power_rel:.2f}x power adds "
+    print(f"\n=> the evolved circuit at {power_rel:.2f}x power adds "
           f"{100 * (ppl_approx / ppl_int8 - 1):+.2f}% perplexity over "
           f"exact int8 arithmetic")
+    return {"ppl_fp32": ppl_fp, "ppl_int8": ppl_int8,
+            "ppl_approx": ppl_approx, "power_rel": power_rel,
+            "constraint": constraint}
 
 
 if __name__ == "__main__":

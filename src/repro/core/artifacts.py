@@ -1,0 +1,378 @@
+"""Fingerprinted circuit-artifact registry: the evolve → LUT → serve bridge.
+
+Sweep shards (``core.results``) hold evolved genomes + exact characterization;
+serving (``launch/serve.py --approx-lut``) needs a product LUT it can trust.
+This module is the contract between the two (DESIGN.md §12):
+
+  * ``export_elites`` reads a sweep ``results_dir`` through
+    ``SweepResultReader``, picks the per-constraint-group elites (feasible
+    rows, certified ones preferred, lowest relative power wins) and
+    materializes each as one self-contained ``.npz`` artifact: the
+    ``(2^w, 2^w)`` product LUT from ``core.library.multiplier_lut``, the
+    genome it was derived from, the exact metric vector + standard errors,
+    the constraint thresholds, the grid fingerprint of the sweep that
+    produced it, a schema version, and a content digest over all of it.
+    A ``registry.json`` manifest indexes the artifacts; every write goes
+    through ``checkpoint.store`` (tmp + fsync + rename), so presence is the
+    commit marker — a crashed export never leaves a half-written artifact
+    under a committed name.
+  * ``load_artifact`` is the verify path: it recomputes the content digest
+    from the loaded payload AND re-derives the LUT from the shipped genome,
+    refusing the artifact on any mismatch — a registry entry that passes
+    ``load_artifact(path)`` is guaranteed to be the arithmetic the sweep
+    characterized, not a corrupted or hand-edited table.
+
+Digest scheme: sha256 over every payload array's (name, dtype, shape, bytes),
+in sorted key order — deterministic across platforms (all payload arrays are
+fixed-dtype little-endian numpy), and covering the genome, LUT and metrics
+alike, so silent single-byte LUT corruption is caught even before the
+genome-replay check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Sequence
+
+import numpy as np
+
+from repro.checkpoint.store import atomic_save_npz, atomic_write_json
+from repro.core import metrics as M
+
+ARTIFACT_SCHEMA_VERSION = 1
+REGISTRY = "registry.json"
+
+#: payload keys covered by the content digest (everything except the digest
+#: itself); load_artifact refuses artifacts with missing keys
+_PAYLOAD_KEYS = (
+    "schema_version", "kind", "width", "n_n",
+    "lut", "genome_nodes", "genome_outs",
+    "metrics", "metrics_stderr", "thresholds",
+    "power_rel", "error_mean", "error_std",
+    "feasible", "certified", "seed", "gauss_sigma",
+    "constraint", "grid_fingerprint", "grid_row",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExportPolicy:
+    """Elite-selection policy of ``export_elites``.
+
+    Rows are grouped by (constraint description, gauss σ) — one group per
+    grid constraint — and within each group ranked certified-first then by
+    ascending relative power (the paper's selection rule: the cheapest
+    circuit that provably satisfies the constraint).
+    """
+    top_k: int = 1                  # artifacts per constraint group
+    feasible_only: bool = True      # drop constraint-violating rows
+    require_certified: bool = False  # hard-require exact-certified metrics
+
+
+@dataclasses.dataclass
+class Artifact:
+    """One loaded (and, by default, verified) registry artifact."""
+    lut: np.ndarray                 # (2^w, 2^w) int32 product table
+    genome_nodes: np.ndarray        # (n_n, 3) int32
+    genome_outs: np.ndarray         # (n_o,) int32
+    width: int
+    kind: str
+    n_n: int
+    metrics: np.ndarray             # (N_METRICS,) float32
+    metrics_stderr: np.ndarray      # (N_METRICS,) float32
+    thresholds: np.ndarray          # (N_METRICS,) float32
+    power_rel: float
+    error_mean: float
+    error_std: float
+    feasible: bool
+    certified: bool
+    seed: int
+    gauss_sigma: float
+    constraint: str
+    grid_fingerprint: str
+    grid_row: int
+    digest: str
+    path: str | None = None
+
+    def metric_dict(self) -> dict[str, float]:
+        return {n: float(v) for n, v in zip(M.METRIC_NAMES, self.metrics)}
+
+
+def content_digest(payload: dict[str, np.ndarray]) -> str:
+    """sha256 over (name, dtype, shape, bytes) of every payload array in
+    sorted key order.  ``digest`` itself is excluded."""
+    h = hashlib.sha256()
+    for key in sorted(payload):
+        if key == "digest":
+            continue
+        arr = np.ascontiguousarray(payload[key])
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _recompute_lut(nodes: np.ndarray, outs: np.ndarray, width: int,
+                   n_n: int, n_o: int) -> np.ndarray:
+    """Replay the genome through the simulator: the authoritative LUT."""
+    import jax.numpy as jnp
+    from repro.core.genome import CGPSpec, Genome
+    from repro.core.library import multiplier_lut
+    genome = Genome(jnp.asarray(np.asarray(nodes, np.int32)),
+                    jnp.asarray(np.asarray(outs, np.int32)))
+    return multiplier_lut(genome, CGPSpec(2 * width, n_o, n_n))
+
+
+def _group_rows(grid: Sequence[dict]) -> dict[tuple, list[int]]:
+    """grid-order row indices grouped by (constraint, gauss σ)."""
+    groups: dict[tuple, list[int]] = {}
+    for i, g in enumerate(grid):
+        key = (g["constraint"], float(g.get("gauss_sigma", 0.0)))
+        groups.setdefault(key, []).append(i)
+    return groups
+
+
+def export_elites(results_dir: str, out_dir: str,
+                  policy: ExportPolicy | None = None, *,
+                  width: int | None = None,
+                  kind: str | None = None) -> dict:
+    """Export per-constraint elite circuits from a sweep as LUT artifacts.
+
+    Args:
+      results_dir: a ``SweepResultWriter`` directory (manifest + shards).
+      out_dir: registry directory; receives one ``.npz`` per elite plus
+        ``registry.json``.  Re-exporting the same sweep is idempotent
+        (artifact names include the content digest); a directory already
+        holding a DIFFERENT grid's registry is refused.
+      policy: elite selection (default ``ExportPolicy()``).
+      width/kind: problem geometry overrides for results directories whose
+        manifest predates the ``problem`` block (DESIGN.md §12); newer
+        manifests carry them and the overrides must agree if given.
+
+    Returns the registry manifest dict (also written to
+    ``out_dir/registry.json``).
+    """
+    from repro.core.results import SweepResultReader
+    policy = policy or ExportPolicy()
+    reader = SweepResultReader(results_dir)
+    problem = reader.manifest.get("problem") or {}
+    if width is None:
+        width = problem.get("width")
+    elif problem.get("width") not in (None, width):
+        raise ValueError(f"width={width} contradicts the results manifest "
+                         f"(problem.width={problem['width']})")
+    if kind is None:
+        kind = problem.get("kind", "mul")
+    if width is None:
+        raise ValueError(
+            f"results manifest at {results_dir!r} predates problem metadata "
+            f"— pass width= (and kind=) explicitly")
+    if kind != "mul":
+        raise ValueError(f"LUT artifacts are multiplier deployments; "
+                         f"kind={kind!r} is not exportable")
+
+    dims = reader.manifest["dims"]
+    s = reader.summary(["parent_nodes", "parent_outs", "metrics",
+                        "metrics_stderr", "power_rel", "feasible",
+                        "certified_mask", "thresholds", "error_mean",
+                        "error_std"])
+    grid = reader.manifest["grid"]
+
+    # refuse to mix registries: out_dir may hold THIS grid's export only
+    reg_path = os.path.join(out_dir, REGISTRY)
+    if os.path.exists(reg_path):
+        with open(reg_path) as f:
+            have = json.load(f)
+        if have.get("grid_fingerprint") != reader.fingerprint:
+            raise ValueError(
+                f"registry {out_dir!r} holds a different sweep "
+                f"(fingerprint {have.get('grid_fingerprint')!r} != "
+                f"{reader.fingerprint!r}); use a fresh directory")
+
+    entries = []
+    os.makedirs(out_dir, exist_ok=True)
+    for (constraint, sigma), rows in sorted(_group_rows(grid).items()):
+        cand = [i for i in rows if s["done_mask"][i]]
+        if policy.feasible_only:
+            cand = [i for i in cand if s["feasible"][i]]
+        if policy.require_certified:
+            cand = [i for i in cand if s["certified_mask"][i]]
+        # certified elites outrank uncertified; power breaks ties; the grid
+        # row index makes the order (and thus the registry) deterministic
+        cand.sort(key=lambda i: (-int(s["certified_mask"][i]),
+                                 float(s["power_rel"][i]), i))
+        for i in cand[:policy.top_k]:
+            lut = _recompute_lut(s["parent_nodes"][i], s["parent_outs"][i],
+                                 width, dims["n_n"], dims["n_o"])
+            payload = {
+                "schema_version": np.int32(ARTIFACT_SCHEMA_VERSION),
+                "kind": np.str_(kind),
+                "width": np.int32(width),
+                "n_n": np.int32(dims["n_n"]),
+                "lut": np.asarray(lut, np.int32),
+                "genome_nodes": np.asarray(s["parent_nodes"][i], np.int32),
+                "genome_outs": np.asarray(s["parent_outs"][i], np.int32),
+                "metrics": np.asarray(s["metrics"][i], np.float32),
+                "metrics_stderr": np.asarray(s["metrics_stderr"][i],
+                                             np.float32),
+                "thresholds": np.asarray(s["thresholds"][i], np.float32),
+                "power_rel": np.float32(s["power_rel"][i]),
+                "error_mean": np.float32(s["error_mean"][i]),
+                "error_std": np.float32(s["error_std"][i]),
+                "feasible": np.uint8(s["feasible"][i]),
+                "certified": np.uint8(s["certified_mask"][i]),
+                "seed": np.int32(grid[i]["seed"]),
+                "gauss_sigma": np.float32(sigma),
+                "constraint": np.str_(constraint),
+                "grid_fingerprint": np.str_(reader.fingerprint),
+                "grid_row": np.int32(i),
+            }
+            digest = content_digest(payload)
+            payload["digest"] = np.str_(digest)
+            name = f"{kind}{width}_row{i:05d}_{digest[:12]}.npz"
+            atomic_save_npz(os.path.join(out_dir, name), payload)
+            entries.append({
+                "file": name, "digest": digest, "grid_row": int(i),
+                "constraint": constraint, "seed": int(grid[i]["seed"]),
+                "gauss_sigma": float(sigma),
+                "power_rel": float(s["power_rel"][i]),
+                "feasible": bool(s["feasible"][i]),
+                "certified": bool(s["certified_mask"][i]),
+                "metrics": {n: float(v) for n, v in
+                            zip(M.METRIC_NAMES, s["metrics"][i])},
+            })
+
+    registry = {
+        "schema_version": ARTIFACT_SCHEMA_VERSION,
+        "grid_fingerprint": reader.fingerprint,
+        "problem": {"width": int(width), "kind": kind,
+                    "n_n": int(dims["n_n"])},
+        "policy": dataclasses.asdict(policy),
+        "source_results_dir": os.path.abspath(results_dir),
+        "artifacts": entries,
+    }
+    atomic_write_json(reg_path, registry)
+    return registry
+
+
+def load_artifact(path: str, *, verify: bool = True,
+                  expect_fingerprint: str | None = None) -> Artifact:
+    """Load one artifact npz; verify its digest and replay its genome.
+
+    ``verify=True`` (the default, and what serving uses) recomputes the
+    content digest over the loaded payload and re-derives the LUT from the
+    shipped genome through the circuit simulator — any mismatch (bit rot,
+    truncation, a hand-edited LUT, a genome/LUT swap) raises ``ValueError``.
+    ``expect_fingerprint`` additionally pins the sweep the artifact must
+    come from.
+    """
+    with np.load(path) as z:
+        missing = [k for k in _PAYLOAD_KEYS if k not in z]
+        if missing:
+            raise ValueError(f"artifact {path!r} missing keys {missing}")
+        payload = {k: np.asarray(z[k]) for k in z.files}
+    ver = int(payload["schema_version"])
+    if ver > ARTIFACT_SCHEMA_VERSION:
+        raise ValueError(f"artifact schema v{ver} newer than supported "
+                         f"v{ARTIFACT_SCHEMA_VERSION}: {path!r}")
+    stored_digest = str(payload.get("digest", ""))
+    art = Artifact(
+        lut=payload["lut"].astype(np.int32),
+        genome_nodes=payload["genome_nodes"],
+        genome_outs=payload["genome_outs"],
+        width=int(payload["width"]),
+        kind=str(payload["kind"]),
+        n_n=int(payload["n_n"]),
+        metrics=payload["metrics"],
+        metrics_stderr=payload["metrics_stderr"],
+        thresholds=payload["thresholds"],
+        power_rel=float(payload["power_rel"]),
+        error_mean=float(payload["error_mean"]),
+        error_std=float(payload["error_std"]),
+        feasible=bool(payload["feasible"]),
+        certified=bool(payload["certified"]),
+        seed=int(payload["seed"]),
+        gauss_sigma=float(payload["gauss_sigma"]),
+        constraint=str(payload["constraint"]),
+        grid_fingerprint=str(payload["grid_fingerprint"]),
+        grid_row=int(payload["grid_row"]),
+        digest=stored_digest,
+        path=path,
+    )
+    if expect_fingerprint is not None \
+            and art.grid_fingerprint != expect_fingerprint:
+        raise ValueError(
+            f"artifact {path!r} comes from grid "
+            f"{art.grid_fingerprint[:12]}…, expected "
+            f"{expect_fingerprint[:12]}… — wrong sweep")
+    if verify:
+        want = content_digest(payload)
+        if want != stored_digest:
+            raise ValueError(f"artifact {path!r} digest mismatch "
+                             f"(stored {stored_digest[:12]}…, content "
+                             f"{want[:12]}…) — refusing corrupt artifact")
+        replayed = _recompute_lut(art.genome_nodes, art.genome_outs,
+                                  art.width, art.n_n,
+                                  art.genome_outs.shape[0])
+        if not np.array_equal(replayed, art.lut):
+            raise ValueError(f"artifact {path!r} LUT does not match its "
+                             f"genome replay — refusing tampered artifact")
+    return art
+
+
+def load_registry(registry_dir: str) -> dict:
+    path = os.path.join(registry_dir, REGISTRY)
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no {REGISTRY} in {registry_dir!r} "
+                                f"(run export_elites first)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def verify_registry(registry_dir: str) -> list[Artifact]:
+    """Fully verify every registry entry (digest + genome replay + the
+    registry's own digest index).  Returns the loaded artifacts; raises on
+    the first failure."""
+    reg = load_registry(registry_dir)
+    arts = []
+    for entry in reg["artifacts"]:
+        art = load_artifact(os.path.join(registry_dir, entry["file"]),
+                            verify=True,
+                            expect_fingerprint=reg["grid_fingerprint"])
+        if art.digest != entry["digest"]:
+            raise ValueError(f"registry digest for {entry['file']} "
+                             f"({entry['digest'][:12]}…) != artifact digest "
+                             f"({art.digest[:12]}…)")
+        arts.append(art)
+    return arts
+
+
+def select_artifact(registry_dir: str, *, constraint: str | None = None,
+                    certified_only: bool = False) -> str:
+    """Pick one artifact path from a registry: lowest relative power among
+    feasible entries (certified entries outrank uncertified), optionally
+    filtered to constraints containing ``constraint`` as a substring."""
+    reg = load_registry(registry_dir)
+    cand = [e for e in reg["artifacts"] if e["feasible"]]
+    if constraint is not None:
+        cand = [e for e in cand if constraint in e["constraint"]]
+    if certified_only:
+        cand = [e for e in cand if e["certified"]]
+    if not cand:
+        raise ValueError(f"no matching artifact in {registry_dir!r} "
+                         f"(constraint={constraint!r}, "
+                         f"certified_only={certified_only})")
+    best = min(cand, key=lambda e: (-int(e["certified"]), e["power_rel"],
+                                    e["grid_row"]))
+    return os.path.join(registry_dir, best["file"])
+
+
+def resolve_artifact(path: str, *, verify: bool = True) -> Artifact:
+    """Load an artifact from either a direct ``.npz`` path or a registry
+    directory (best entry per ``select_artifact``) — the form ``serve
+    --approx-lut`` accepts."""
+    if os.path.isdir(path):
+        path = select_artifact(path)
+    return load_artifact(path, verify=verify)

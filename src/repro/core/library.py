@@ -75,5 +75,8 @@ def multiplier_lut(genome: Genome, spec: CGPSpec) -> np.ndarray:
     """
     from repro.core.simulate import simulate_values
     w = spec.n_i // 2
-    vals = np.asarray(simulate_values(genome, spec))
+    # sub-word cubes (n_i < 5) come back tiled to 32 lanes by whole-cube
+    # replication (simulate.input_planes); the first 2^n_i lanes are the
+    # cube in index order
+    vals = np.asarray(simulate_values(genome, spec))[:1 << spec.n_i]
     return vals.reshape(1 << w, 1 << w).T.copy()  # [a, b] -> a*b approx

@@ -237,7 +237,8 @@ class SweepResultWriter:
                  grid_meta: list[dict], n_runs: int, gens: int,
                  n_n: int, n_o: int, keep_history: str, chunk_size: int,
                  chunk_spans: Sequence[tuple[int, int]] | None = None,
-                 n_pods: int = 1, on_mismatch: str = "error"):
+                 n_pods: int = 1, problem_meta: dict | None = None,
+                 on_mismatch: str = "error"):
         self.results_dir = results_dir
         keep_history = normalize_history_mode(keep_history)
         dims = {"gens": gens, "n_metrics": M.N_METRICS,
@@ -254,6 +255,13 @@ class SweepResultWriter:
             "n_runs": int(n_runs),
             "dims": dims,
             "metric_names": list(M.METRIC_NAMES),
+            # problem geometry (width/kind) so downstream consumers — the
+            # artifact registry (core.artifacts, DESIGN.md §12) — can rebuild
+            # LUTs from genomes without out-of-band knowledge.  Informational:
+            # not part of the mismatch check (the grid fingerprint already
+            # covers the problem), absent (None) for writers that replay raw
+            # buffers without a SearchConfig.
+            "problem": problem_meta,
             "grid": grid_meta,
         }
         os.makedirs(results_dir, exist_ok=True)
@@ -277,14 +285,22 @@ class SweepResultWriter:
                     p = os.path.join(results_dir, name)
                     shutil.rmtree(p) if os.path.isdir(p) else os.remove(p)
                 atomic_write_json(path, manifest)
-            elif manifest["chunk_spans"] is None and have.get("chunk_spans"):
-                # reopened without a plan: keep the pinned one (the plan is
-                # a deterministic function of the matched fingerprint +
-                # chunk_size, so it cannot disagree with this sweep)
-                manifest["chunk_spans"] = have["chunk_spans"]
-            elif any(k not in have for k in ("n_pods", "chunk_spans")):
-                # matching pre-pod directory: one-time idempotent upgrade
-                atomic_write_json(path, manifest)
+            else:
+                if manifest["chunk_spans"] is None and have.get(
+                        "chunk_spans"):
+                    # reopened without a plan: keep the pinned one (the plan
+                    # is a deterministic function of the matched fingerprint
+                    # + chunk_size, so it cannot disagree with this sweep)
+                    manifest["chunk_spans"] = have["chunk_spans"]
+                if manifest["problem"] is None and have.get("problem"):
+                    # reopened by a problem-blind writer: keep the pinned
+                    # geometry (same fingerprint => same problem)
+                    manifest["problem"] = have["problem"]
+                if any(k not in have
+                       for k in ("n_pods", "chunk_spans", "problem")):
+                    # matching pre-pod / pre-§12 directory: one-time
+                    # idempotent upgrade
+                    atomic_write_json(path, manifest)
         else:
             atomic_write_json(path, manifest)
         self.manifest = manifest
@@ -440,6 +456,9 @@ class SweepResultReader:
         self.metric_names: list[str] = self.manifest["metric_names"]
         # pre-pod manifests pin neither a pod count nor the chunk plan
         self.n_pods: int = self.manifest.get("n_pods", 1)
+        # problem geometry for LUT reconstruction (core.artifacts); None
+        # for directories written before DESIGN.md §12
+        self.problem: dict | None = self.manifest.get("problem")
 
     # -- shard-level access -------------------------------------------------
 

@@ -744,7 +744,9 @@ def run_sweep_batched(cfg, constraints: Sequence[ConstraintSpec],
                        for con, seed in grid],
             n_runs=n_runs, gens=gens, n_n=spec.n_n, n_o=spec.n_o,
             keep_history=mode, chunk_size=sweep.chunk_size,
-            chunk_spans=chunks, n_pods=sweep.n_pods)
+            chunk_spans=chunks, n_pods=sweep.n_pods,
+            problem_meta={"width": cfg.width, "kind": cfg.kind,
+                          "n_n": spec.n_n})
         # shards commit every chunk (checkpoints only every
         # checkpoint_every), so they are the freshest resume state
         for s, e in writer.restore(bufs):

@@ -51,13 +51,22 @@ def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
                interpret: bool = True) -> jax.Array:
     """C = LUT-matmul(A, B).  A: (M, K) uint8/int32, B: (K, N), LUT: (256,256).
 
-    Shapes must tile evenly (ops.py pads otherwise).
+    This is the raw tiled kernel: shapes must tile evenly.  Use
+    ``kernels.ops.lut_matmul`` for arbitrary shapes — it pads to the tile
+    grid, slices back, and corrects the K-padding ``LUT[0, 0]`` bias an
+    approximate table introduces.
     """
     M, K = a.shape
     K2, N = b.shape
-    assert K == K2
+    if K != K2:
+        raise ValueError(f"contraction mismatch: A is (M={M}, K={K}), "
+                         f"B is (K={K2}, N={N})")
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    if M % bm or N % bn or K % bk:
+        raise ValueError(
+            f"shapes must tile evenly: (M={M}, N={N}, K={K}) vs tiles "
+            f"(bm={bm}, bn={bn}, bk={bk}) — use kernels.ops.lut_matmul, "
+            f"which pads and corrects the LUT[0,0] bias")
 
     kernel = functools.partial(lut_matmul_kernel, bk=bk)
     return pl.pallas_call(

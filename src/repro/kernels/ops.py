@@ -160,7 +160,15 @@ def cgp_eval_batched(genomes: Genome, spec: CGPSpec, in_planes: jax.Array,
 
 def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
                interpret: bool | None = None, **tiles) -> jax.Array:
-    """Approximate-multiplier emulated matmul (pads to tile multiples)."""
+    """Approximate-multiplier emulated matmul (pads to tile multiples).
+
+    Arbitrary (M, N, K) are accepted: operands are zero-padded up to the
+    tile grid and the output sliced back.  Zero-padding the contraction dim
+    is NOT free under an approximate LUT — every padded k contributes
+    ``LUT[0, 0]`` (an evolved circuit need not map 0×0 to 0) — so the
+    ``pad_k * LUT[0, 0]`` bias is subtracted from every output element,
+    keeping ragged shapes bit-identical to the unpadded LUT contraction.
+    """
     if interpret is None:
         interpret = default_interpret()
     M_, K = a.shape
@@ -173,7 +181,10 @@ def lut_matmul(a: jax.Array, b: jax.Array, lut: jax.Array,
     b_p = jnp.pad(b, ((0, pk), (0, pn)))
     out = _lut.lut_matmul(a_p, b_p, lut, bm=bm, bn=bn, bk=bk,
                           interpret=interpret)
-    return out[:M_, :N]
+    out = out[:M_, :N]
+    if pk:
+        out = out - pk * lut[0, 0].astype(out.dtype)
+    return out
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -116,6 +116,13 @@ def main():
                          "policy ramps the cap toward exact checks as the "
                          "sweep converges (default: 8)")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--export-artifacts", default=None, metavar="DIR",
+                    help="after the sweep, export per-constraint elite "
+                         "circuits from --results-dir as fingerprinted LUT "
+                         "artifacts + registry.json (core.artifacts, "
+                         "DESIGN.md section 12) into DIR — the input of "
+                         "`serve --approx-lut`; equivalent to running "
+                         "`python -m repro.launch.export` afterwards")
     ap.add_argument("--chunk-size", type=int, default=32,
                     help="runs per jit'd batch of the sweep engine")
     ap.add_argument("--checkpoint-dir", default=None,
@@ -184,6 +191,15 @@ def main():
     if args.migrate_every and not args.results_dir:
         ap.error("--migrate-every needs a --results-dir: migrant files "
                  "ride the shared results directory (DESIGN.md section 11)")
+    if args.export_artifacts and not args.results_dir:
+        ap.error("--export-artifacts reads the sweep back through the "
+                 "results layer; it needs a --results-dir")
+    if args.export_artifacts and args.serial:
+        ap.error("--serial never writes result shards; drop --serial to "
+                 "use --export-artifacts")
+    if args.export_artifacts and args.kind != "mul":
+        ap.error("--export-artifacts builds multiplier LUT artifacts; "
+                 "--kind add is not exportable")
 
     cfg = SearchConfig(
         width=args.width, kind=args.kind, n_n=args.nodes,
@@ -268,6 +284,12 @@ def main():
     if args.out:
         save_library(records, args.out)
         print(f"[evolve] wrote {len(records)} circuits -> {args.out}")
+    if args.export_artifacts:
+        from repro.core.artifacts import export_elites
+        registry = export_elites(args.results_dir, args.export_artifacts)
+        print(f"[evolve] exported {len(registry['artifacts'])} LUT "
+              f"artifact(s) -> {args.export_artifacts} "
+              f"(grid {registry['grid_fingerprint'][:12]}...)", flush=True)
 
 
 if __name__ == "__main__":

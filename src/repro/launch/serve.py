@@ -7,6 +7,19 @@ step is the same function the dry-run lowers for decode_32k/long_500k.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --reduced \
       --requests 8 --prompt-len 32 --gen-len 16
+
+Approximate-arithmetic serving (the evolve → LUT → serve bridge, DESIGN.md
+§12): ``--approx-lut`` takes a verified registry artifact (or a registry
+directory — the lowest-power feasible entry is picked) and routes every
+projection matmul through the evolved multiplier's product LUT
+(``models/quant.approx_matmul`` → ``kernels/lut_matmul``), then reports
+requests/s, tokens/s and the model-level damage — logit error and
+perplexity delta vs exact-int8 and vs fp32.  ``--summary-out`` lands the
+whole report as a stamped ``deploy_summary.json``:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --reduced \
+      --requests 4 --approx-lut /shared/registry --summary-out \
+      deploy_summary.json
 """
 from __future__ import annotations
 
@@ -21,6 +34,7 @@ import numpy as np
 from repro.configs import base as B
 from repro.launch import steps as ST
 from repro.models import model as M
+from repro.models import quant
 from repro.parallel import ctx
 
 
@@ -35,9 +49,38 @@ class Request:
 
 def serve(arch: str, n_requests: int = 8, prompt_len: int = 32,
           gen_len: int = 16, slots: int = 4, reduced: bool = True,
-          seed: int = 0, greedy: bool = True) -> dict:
+          seed: int = 0, greedy: bool = True,
+          approx_lut: np.ndarray | None = None) -> dict:
+    """Run the continuous-batching loop; returns throughput + outputs.
+
+    ``approx_lut`` (a 256×256 int32 product table) routes every projection
+    matmul through the emulated approximate multiplier for the whole run.
+    The LUT is installed BEFORE the jit closures below are built — the
+    ``models/quant`` module global is captured as a compile-time constant,
+    so a fresh ``serve`` call per LUT is the supported pattern (this
+    function builds fresh closures every call) — and the previous LUT is
+    restored on exit.
+    """
     mod = B.get_arch(arch)
     cfg: B.ModelConfig = mod.reduced() if reduced else mod.CONFIG
+    prev_lut = quant._LUT
+    if approx_lut is not None:
+        if tuple(np.shape(approx_lut)) != (256, 256):
+            raise ValueError(
+                f"approx_lut must be a 256x256 product table (8-bit "
+                f"operands), got {np.shape(approx_lut)} — re-export from a "
+                f"width-8 sweep")
+        cfg = dataclasses.replace(cfg, approx_matmul=True)
+        quant.set_multiplier_lut(approx_lut)
+    try:
+        return _serve_loop(cfg, n_requests, prompt_len, gen_len, slots,
+                           seed)
+    finally:
+        quant._LUT = prev_lut
+
+
+def _serve_loop(cfg: B.ModelConfig, n_requests: int, prompt_len: int,
+                gen_len: int, slots: int, seed: int) -> dict:
     rng = np.random.default_rng(seed)
     max_len = prompt_len + gen_len
 
@@ -88,10 +131,60 @@ def serve(arch: str, n_requests: int = 8, prompt_len: int = 32,
     wall = time.time() - t0
     return {"requests": n_requests, "decoded_tokens": decoded_tokens,
             "wall_s": wall, "tok_per_s": decoded_tokens / max(wall, 1e-9),
+            "req_per_s": n_requests / max(wall, 1e-9),
             "outputs": {r.rid: r.out for r in reqs}}
 
 
-def main():
+def quality_report(arch: str, lut: np.ndarray, *, reduced: bool = True,
+                   batch: int = 4, seq_len: int = 32, seed: int = 0) -> dict:
+    """Model-level damage of serving on the evolved multiplier.
+
+    Evaluates the SAME random params + token batch under three arithmetics —
+    fp32, exact-int8 (quantization alone) and the approximate LUT — and
+    reports perplexities, their deltas, and mean-|Δlogit| of the prefill
+    logits vs each baseline.  All eager: every call reads the freshly
+    installed LUT (no jit-constant staleness).
+    """
+    mod = B.get_arch(arch)
+    cfg: B.ModelConfig = mod.reduced() if reduced else mod.CONFIG
+    cfg_q = dataclasses.replace(cfg, approx_matmul=True)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(key, cfg)
+    tok_shape = ((batch, seq_len, cfg.n_codebooks)
+                 if cfg.frontend == "audio" else (batch, seq_len))
+    toks = jax.random.randint(key, tok_shape, 0, cfg.vocab)
+    img = (jnp.zeros((batch, cfg.n_img_tokens, cfg.d_model), cfg.adtype())
+           if cfg.frontend == "vision" else None)
+
+    prev_lut = quant._LUT
+    try:
+        def run(c):
+            loss = float(M.lm_loss(params, toks, toks, c,
+                                   image_embeds=img))
+            logits, _ = M.prefill(params, toks, c, image_embeds=img)
+            return loss, np.asarray(logits, np.float32)
+
+        loss_fp, logits_fp = run(cfg)
+        quant.set_multiplier_lut(None)          # exact-int8 baseline
+        loss_i8, logits_i8 = run(cfg_q)
+        quant.set_multiplier_lut(lut)           # evolved approximate circuit
+        loss_ap, logits_ap = run(cfg_q)
+    finally:
+        quant._LUT = prev_lut
+
+    ppl_fp, ppl_i8, ppl_ap = (float(np.exp(v))
+                              for v in (loss_fp, loss_i8, loss_ap))
+    return {
+        "ppl_fp32": ppl_fp, "ppl_int8": ppl_i8, "ppl_approx": ppl_ap,
+        "ppl_delta_vs_fp32": ppl_ap - ppl_fp,
+        "ppl_delta_vs_int8": ppl_ap - ppl_i8,
+        "logit_mae_vs_fp32": float(np.abs(logits_ap - logits_fp).mean()),
+        "logit_mae_vs_int8": float(np.abs(logits_ap - logits_i8).mean()),
+        "eval_batch": batch, "eval_seq_len": seq_len,
+    }
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--requests", type=int, default=8)
@@ -99,12 +192,72 @@ def main():
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--reduced", action="store_true")
-    args = ap.parse_args()
+    ap.add_argument("--approx-lut", default=None, metavar="ARTIFACT",
+                    help="serve on an evolved approximate multiplier: a "
+                         "registry artifact .npz, or a registry directory "
+                         "(lowest-power feasible entry wins).  The artifact "
+                         "is digest-verified and its LUT replayed from the "
+                         "genome before anything is served (core.artifacts, "
+                         "DESIGN.md section 12); quality deltas vs "
+                         "exact-int8 and fp32 are reported next to "
+                         "throughput")
+    ap.add_argument("--summary-out", default=None, metavar="PATH",
+                    help="write the run's throughput + quality report as a "
+                         "stamped deploy_summary.json (atomic write)")
+    args = ap.parse_args(argv)
+
+    art = None
+    lut = None
+    if args.approx_lut:
+        from repro.core.artifacts import resolve_artifact
+        art = resolve_artifact(args.approx_lut)  # digest + genome verified
+        lut = art.lut
+        print(f"[serve] approx artifact {art.path}: {art.constraint} "
+              f"(seed {art.seed}, power_rel={art.power_rel:.4f}, "
+              f"certified={art.certified}, digest {art.digest[:12]}...)")
+
     out = serve(args.arch, n_requests=args.requests,
                 prompt_len=args.prompt_len, gen_len=args.gen_len,
-                slots=args.slots, reduced=args.reduced)
+                slots=args.slots, reduced=args.reduced, approx_lut=lut)
     print(f"[serve] {out['requests']} requests, "
-          f"{out['decoded_tokens']} tokens, {out['tok_per_s']:.1f} tok/s")
+          f"{out['decoded_tokens']} tokens, {out['tok_per_s']:.1f} tok/s, "
+          f"{out['req_per_s']:.2f} req/s")
+
+    quality = None
+    if lut is not None:
+        quality = quality_report(args.arch, lut, reduced=args.reduced,
+                                 seq_len=args.prompt_len)
+        print(f"[serve] perplexity fp32 {quality['ppl_fp32']:.4f} | "
+              f"exact-int8 {quality['ppl_int8']:.4f} | "
+              f"approx {quality['ppl_approx']:.4f} "
+              f"(delta vs int8 {quality['ppl_delta_vs_int8']:+.4f}, "
+              f"vs fp32 {quality['ppl_delta_vs_fp32']:+.4f})")
+        print(f"[serve] logit MAE vs int8 "
+              f"{quality['logit_mae_vs_int8']:.4f}, vs fp32 "
+              f"{quality['logit_mae_vs_fp32']:.4f}")
+
+    if args.summary_out:
+        from repro.checkpoint.store import atomic_write_json
+        summary = {
+            "schema_version": 1,
+            "generated_unix": time.time(),
+            "arch": args.arch, "reduced": args.reduced,
+            "budget": {"requests": args.requests,
+                       "prompt_len": args.prompt_len,
+                       "gen_len": args.gen_len, "slots": args.slots},
+            "artifact": None if art is None else {
+                "path": art.path, "digest": art.digest,
+                "grid_fingerprint": art.grid_fingerprint,
+                "constraint": art.constraint, "seed": art.seed,
+                "power_rel": art.power_rel, "feasible": art.feasible,
+                "certified": art.certified,
+                "metrics": art.metric_dict(),
+            },
+            "serve": {k: v for k, v in out.items() if k != "outputs"},
+            "quality": quality,
+        }
+        atomic_write_json(args.summary_out, summary)
+        print(f"[serve] wrote {args.summary_out}")
 
 
 if __name__ == "__main__":

@@ -17,11 +17,35 @@ equal to float matmul up to quantization error).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _LUT: jax.Array | None = None  # (256, 256) int32, LUT[a, b] ≈ a*b
+
+#: rows-per-chunk bound of the reference gather: the oracle materializes an
+#: (m, K, N) int32 tensor per chunk, so cap m such that m*K*N stays around
+#: 2^24 elements (~64 MB) regardless of batch/sequence size
+_REF_CHUNK_ELEMS = 1 << 24
+
+
+def _lut_backend() -> str:
+    """Which LUT-matmul implementation ``approx_matmul`` dispatches to:
+    the Pallas kernel (``kernels.ops.lut_matmul``) or the jnp gather oracle
+    (``kernels.ref.lut_matmul_ref``).  ``REPRO_LUT_BACKEND`` forces one
+    ("kernel" / "ref"); "auto" (default) picks the kernel on TPU — where it
+    runs compiled — and the oracle elsewhere (interpret-mode Pallas on CPU
+    is far slower than the gather, with bit-identical results either way;
+    tests/test_lut_matmul.py holds the two equal)."""
+    mode = os.environ.get("REPRO_LUT_BACKEND", "auto")
+    if mode not in ("auto", "kernel", "ref"):
+        raise ValueError(f"REPRO_LUT_BACKEND must be auto|kernel|ref, "
+                         f"got {mode!r}")
+    if mode == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "ref"
+    return mode
 
 
 def set_multiplier_lut(lut: np.ndarray | None) -> None:
@@ -57,15 +81,21 @@ def approx_matmul(x: jax.Array, w: jax.Array,
     qx, sx, zx = quantize_u8(x2)
     qw, sw, zw = quantize_u8(w)
 
-    from repro.kernels import ref as kref
     M, N = x2.shape[0], w.shape[1]
-    # chunk the M dim so the (M, K, N) gather in the oracle stays bounded;
-    # on TPU this dispatches to kernels.ops.lut_matmul instead.
-    if jax.default_backend() == "tpu":
+    if _lut_backend() == "kernel":
         from repro.kernels import ops as kops
         acc = kops.lut_matmul(qx, qw, lut)
     else:
-        acc = kref.lut_matmul_ref(qx, qw, lut)
+        from repro.kernels import ref as kref
+        # chunk the M dim so the oracle's (m, K, N) gather stays bounded;
+        # M is static under jit, so the loop unrolls to a fixed concat
+        rows = max(1, _REF_CHUNK_ELEMS // max(1, K * N))
+        if M <= rows:
+            acc = kref.lut_matmul_ref(qx, qw, lut)
+        else:
+            acc = jnp.concatenate(
+                [kref.lut_matmul_ref(qx[m:m + rows], qw, lut)
+                 for m in range(0, M, rows)], axis=0)
     acc = acc.astype(jnp.float32)
     # exact zero-point correction: Σ(qx-zx)(qw-zw) = Σqxqw - zwΣqx - zxΣqw
     # + K·zx·zw — the Σqxqw term uses the (approximate) LUT, the correction

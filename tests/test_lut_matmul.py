@@ -1,0 +1,279 @@
+"""LUT-matmul deployment path + circuit-artifact registry (DESIGN.md §12).
+
+The serving-side contract, in three layers:
+
+  * kernel fidelity — under the EXACT product LUT, ``kernels.ops.lut_matmul``
+    must be bit-identical to a plain int32 matmul for any (M, N, K),
+    including ragged shapes the wrapper pads; under an APPROXIMATE LUT it
+    must match a NumPy gather oracle bit-for-bit (the pad-bias regression:
+    zero-padded contraction steps each inject ``LUT[0, 0]``, which the
+    wrapper must subtract back out);
+  * artifact integrity — ``export_elites``/``load_artifact`` round-trip a
+    sweep's elites, and the verify path refuses corrupted payloads,
+    wrong-sweep fingerprints and unverifiable directories;
+  * schema compatibility — v2 (pre-certification) shard directories export
+    with ``certified=0``; manifests predating the ``problem`` block need an
+    explicit ``width=``.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.artifacts import (ARTIFACT_SCHEMA_VERSION, ExportPolicy,
+                                  REGISTRY, content_digest, export_elites,
+                                  load_artifact, load_registry,
+                                  resolve_artifact, select_artifact,
+                                  verify_registry)
+from repro.core.evolve import EvolveConfig
+from repro.core.fitness import ConstraintSpec
+from repro.core.search import SearchConfig
+from repro.core.sweep import SweepConfig, run_sweep_batched
+from repro.kernels import ops, ref
+
+EXACT_LUT = (np.arange(256, dtype=np.int64)[:, None]
+             * np.arange(256, dtype=np.int64)[None, :]).astype(np.int32)
+
+#: ragged shapes cover every pad combination: M-only, K-only, N-only, all
+#: three, the degenerate 1x1x1, and one evenly-tiled control
+SHAPES = [(128, 128, 128), (7, 130, 5), (24, 48, 16), (130, 7, 129),
+          (1, 1, 1), (33, 128, 64)]
+
+
+def _rand_operands(m, n, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 256, (m, k), dtype=np.uint8),
+            rng.integers(0, 256, (k, n), dtype=np.uint8))
+
+
+def _np_oracle(a, b, lut):
+    """Pure-NumPy gather contraction: C[m,n] = sum_k LUT[a[m,k], b[k,n]]."""
+    prods = lut.astype(np.int64)[a.astype(np.int64)[:, :, None],
+                                 b.astype(np.int64)[None, :, :]]
+    return prods.sum(axis=1).astype(np.int32)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+def test_exact_lut_matches_int8_matmul(m, n, k):
+    """With the exact product table the LUT kernel IS an integer matmul —
+    bit-identical, every shape (the deploy-job sanity invariant)."""
+    a, b = _rand_operands(m, n, k)
+    want = np.asarray(jnp.matmul(jnp.asarray(a, jnp.int32),
+                                 jnp.asarray(b, jnp.int32)))
+    got = np.asarray(ops.lut_matmul(jnp.asarray(a), jnp.asarray(b),
+                                    jnp.asarray(EXACT_LUT)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+def test_approx_lut_matches_numpy_oracle(m, n, k):
+    """An arbitrary (approximate) LUT contracts bit-identically to the
+    NumPy gather oracle through both the kernel wrapper and the jnp ref."""
+    rng = np.random.default_rng(k * 1000 + m)
+    lut = (EXACT_LUT + rng.integers(-3, 4, EXACT_LUT.shape)).astype(np.int32)
+    a, b = _rand_operands(m, n, k, seed=1)
+    want = _np_oracle(a, b, lut)
+    got_kernel = np.asarray(ops.lut_matmul(jnp.asarray(a), jnp.asarray(b),
+                                           jnp.asarray(lut)))
+    got_ref = np.asarray(ref.lut_matmul_ref(jnp.asarray(a), jnp.asarray(b),
+                                            jnp.asarray(lut)))
+    np.testing.assert_array_equal(got_kernel, want)
+    np.testing.assert_array_equal(got_ref, want)
+
+
+def test_ragged_k_pad_bias_regression():
+    """Zero-padding K is not free when LUT[0,0] != 0: each padded step adds
+    LUT[0,0] to EVERY output element.  The wrapper must subtract the bias
+    (regression: pre-fix, a ragged K=5 with LUT[0,0]=7 was off by
+    (bk - 5) * 7 everywhere)."""
+    lut = EXACT_LUT.copy()
+    lut[0, 0] = 7                       # evolved circuits need not map 0*0->0
+    for m, n, k in [(3, 4, 5), (16, 16, 100), (130, 7, 129)]:
+        a, b = _rand_operands(m, n, k, seed=2)
+        want = _np_oracle(a, b, lut)
+        got = np.asarray(ops.lut_matmul(jnp.asarray(a), jnp.asarray(b),
+                                        jnp.asarray(lut)))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_raw_kernel_refuses_ragged_shapes():
+    """The raw tiled kernel (kernels.lut_matmul) raises on uneven tiling —
+    padding and bias correction live in the ops wrapper only."""
+    from repro.kernels import lut_matmul as raw
+    a, b = _rand_operands(7, 130, 5)
+    with pytest.raises(ValueError, match="tile evenly"):
+        raw.lut_matmul(jnp.asarray(a), jnp.asarray(b),
+                       jnp.asarray(EXACT_LUT))
+    with pytest.raises(ValueError, match="contraction"):
+        raw.lut_matmul(jnp.zeros((8, 16), jnp.uint8),
+                       jnp.zeros((8, 8), jnp.uint8), jnp.asarray(EXACT_LUT))
+
+
+# ---------------------------------------------------------------------------
+# artifact registry: a tiny real multiplier sweep, exported once per module
+# ---------------------------------------------------------------------------
+
+CFG = SearchConfig(width=2, kind="mul", n_n=40,
+                   evolve=EvolveConfig(generations=40, lam=3))
+CONSTRAINTS = [ConstraintSpec(mae=2.0), ConstraintSpec(er=60.0)]
+SEEDS = (0,)
+
+
+@pytest.fixture(scope="module")
+def sweep_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("shards")
+    run_sweep_batched(CFG, CONSTRAINTS, SEEDS,
+                      SweepConfig(chunk_size=2, keep_history="none",
+                                  results_dir=str(d)))
+    return str(d)
+
+
+@pytest.fixture()
+def registry_dir(sweep_dir, tmp_path):
+    out = str(tmp_path / "registry")
+    export_elites(sweep_dir, out)
+    return out
+
+
+def test_export_load_round_trip(sweep_dir, registry_dir):
+    reg = load_registry(registry_dir)
+    assert reg["schema_version"] == ARTIFACT_SCHEMA_VERSION
+    assert reg["problem"] == {"width": 2, "kind": "mul", "n_n": 40}
+    assert len(reg["artifacts"]) == len(CONSTRAINTS)   # top_k=1 per group
+    for entry in reg["artifacts"]:
+        art = load_artifact(os.path.join(registry_dir, entry["file"]),
+                            expect_fingerprint=reg["grid_fingerprint"])
+        assert art.width == 2 and art.kind == "mul"
+        assert art.lut.shape == (4, 4) and art.lut.dtype == np.int32
+        assert art.digest == entry["digest"] and len(art.digest) == 64
+        assert art.feasible and art.constraint == entry["constraint"]
+        assert set(art.metric_dict()) == {"mae", "wce", "er", "mre", "avg",
+                                          "acc0", "gauss"}
+    # full verify path: every entry's digest + genome replay + index row
+    assert len(verify_registry(registry_dir)) == len(CONSTRAINTS)
+    # selection picks a feasible entry; resolve accepts the directory form
+    best = select_artifact(registry_dir)
+    assert resolve_artifact(registry_dir).path == best
+    assert resolve_artifact(best).digest == load_artifact(best).digest
+
+
+def test_export_is_idempotent(sweep_dir, registry_dir):
+    """Digest-named artifacts: re-exporting the same sweep rewrites the
+    same files and the same registry."""
+    before = load_registry(registry_dir)
+    export_elites(sweep_dir, registry_dir)
+    after = load_registry(registry_dir)
+    assert before == after
+    npzs = [f for f in os.listdir(registry_dir) if f.endswith(".npz")]
+    assert sorted(npzs) == sorted(e["file"] for e in after["artifacts"])
+
+
+def test_digest_mismatch_refused(registry_dir):
+    """A flipped LUT byte must be refused by the digest check (and the
+    registry-wide verify), not served."""
+    reg = load_registry(registry_dir)
+    path = os.path.join(registry_dir, reg["artifacts"][0]["file"])
+    with np.load(path) as z:
+        payload = {k: np.asarray(z[k]) for k in z.files}
+    payload["lut"] = payload["lut"].copy()
+    payload["lut"][0, 0] += 1
+    np.savez(path, **payload)           # deliberately NOT atomic_save_npz
+    with pytest.raises(ValueError, match="digest mismatch"):
+        load_artifact(path)
+    with pytest.raises(ValueError, match="digest mismatch"):
+        verify_registry(registry_dir)
+    # verify=False loads it anyway (forensics path), flag intact
+    assert load_artifact(path, verify=False).lut[0, 0] \
+        == payload["lut"][0, 0]
+
+
+def test_tampered_lut_with_recomputed_digest_refused(registry_dir):
+    """An attacker who re-stamps the digest after editing the LUT is still
+    caught by the genome-replay check."""
+    reg = load_registry(registry_dir)
+    path = os.path.join(registry_dir, reg["artifacts"][0]["file"])
+    with np.load(path) as z:
+        payload = {k: np.asarray(z[k]) for k in z.files}
+    payload["lut"] = payload["lut"].copy()
+    payload["lut"][1, 1] += 1
+    payload["digest"] = np.str_(content_digest(payload))
+    np.savez(path, **payload)
+    with pytest.raises(ValueError, match="genome replay"):
+        load_artifact(path)
+
+
+def test_wrong_fingerprint_refused(registry_dir):
+    reg = load_registry(registry_dir)
+    path = os.path.join(registry_dir, reg["artifacts"][0]["file"])
+    with pytest.raises(ValueError, match="wrong sweep"):
+        load_artifact(path, expect_fingerprint="0" * 64)
+
+
+def test_registry_dir_collision_refused(registry_dir, tmp_path):
+    """A directory holding a different grid's registry must be refused, not
+    silently mixed."""
+    man = load_registry(registry_dir)
+    man["grid_fingerprint"] = "f" * 64
+    with open(os.path.join(registry_dir, REGISTRY), "w") as f:
+        json.dump(man, f)
+    d = tmp_path / "other-shards"
+    run_sweep_batched(CFG, CONSTRAINTS[:1], SEEDS,
+                      SweepConfig(chunk_size=2, keep_history="none",
+                                  results_dir=str(d)))
+    with pytest.raises(ValueError, match="different sweep"):
+        export_elites(str(d), registry_dir)
+
+
+def test_add_sweeps_not_exportable(sweep_dir, tmp_path):
+    with pytest.raises(ValueError, match="not exportable"):
+        export_elites(sweep_dir, str(tmp_path / "reg"), kind="add")
+    with pytest.raises(ValueError, match="contradicts"):
+        export_elites(sweep_dir, str(tmp_path / "reg"), width=4)
+
+
+def test_v2_shards_export_with_certified_default(sweep_dir, tmp_path):
+    """Pre-§10 (v2) shard sets export fine — certified=0 on every artifact
+    (the reader-side column default)."""
+    import shutil
+    from tests.test_results import _downgrade_to_v2
+    d = str(tmp_path / "v2-shards")
+    shutil.copytree(sweep_dir, d)
+    _downgrade_to_v2(d)
+    out = str(tmp_path / "v2-registry")
+    reg = export_elites(d, out)
+    assert reg["artifacts"] and all(not e["certified"]
+                                    for e in reg["artifacts"])
+    for art in verify_registry(out):
+        assert not art.certified
+
+
+def test_pre_problem_manifest_needs_explicit_width(sweep_dir, tmp_path):
+    """Manifests written before the ``problem`` block: export refuses to
+    guess the operand width, and accepts an explicit one."""
+    import shutil
+    d = str(tmp_path / "old-shards")
+    shutil.copytree(sweep_dir, d)
+    man_path = os.path.join(d, "manifest.json")
+    with open(man_path) as f:
+        man = json.load(f)
+    del man["problem"]
+    with open(man_path, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="predates problem metadata"):
+        export_elites(d, str(tmp_path / "reg"))
+    reg = export_elites(d, str(tmp_path / "reg"), width=2)
+    assert reg["problem"]["width"] == 2
+
+
+def test_require_certified_policy(sweep_dir, tmp_path):
+    """require_certified on an exhaustively-certified width-2 sweep keeps
+    every elite; feasible_only=False admits infeasible rows too."""
+    out = str(tmp_path / "cert-reg")
+    reg = export_elites(sweep_dir, out,
+                        ExportPolicy(require_certified=True))
+    assert all(e["certified"] for e in reg["artifacts"])
+    reg_all = export_elites(sweep_dir, str(tmp_path / "all-reg"),
+                            ExportPolicy(top_k=8, feasible_only=False))
+    assert len(reg_all["artifacts"]) >= len(reg["artifacts"])

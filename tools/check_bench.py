@@ -12,8 +12,9 @@ Metric direction is inferred from the key, the same naming contract
 ``kernel_micro`` uses throughout:
 
   * lower-is-better: ``*_us_per_*``, ``*_ms`` — latency keys;
-  * higher-is-better: ``*_per_s*``, ``*_speedup``, ``*_hit_rate`` —
-    throughput/ratio keys and cache effectiveness;
+  * higher-is-better: ``*_per_s*``, ``*_speedup``, ``*_hit_rate``,
+    ``*_gops`` — throughput/ratio keys, cache effectiveness, and the
+    LUT-matmul deployment kernel;
   * everything else (``n_runs``, ``row_kb``, the ``_meta`` block) is shape
     metadata and ignored.
 
@@ -68,7 +69,7 @@ def direction(key: str) -> str | None:
     if "_us_per_" in leaf or leaf.endswith("_ms"):
         return "down"
     if ("_per_s" in leaf or leaf.endswith("_speedup")
-            or leaf.endswith("_hit_rate")):
+            or leaf.endswith("_hit_rate") or leaf.endswith("_gops")):
         return "up"
     return None
 

@@ -36,9 +36,10 @@ SOURCE_DIRS = ["src", "benchmarks", "examples", "tests", "tools"]
 # into these; §6 is the multi-host sweep surface, §7 the kernel-layout /
 # tuning surface, §8 the phenotype-dedup evaluation cache, §9 the sampled
 # evaluation mode, §10 the exact-verification escalation tier, §11 the
-# async commit pipeline + island migration)
+# async commit pipeline + island migration, §12 the circuit-artifact
+# registry and the evolve → LUT → serve deployment path)
 REQUIRED_DESIGN_SECTIONS = ["§1", "§2", "§3", "§4", "§5", "§6", "§7", "§8",
-                            "§9", "§10", "§11"]
+                            "§9", "§10", "§11", "§12"]
 
 # argparse-bearing entry points that must answer --help (quickstart.py is
 # deliberately absent: it has no CLI and would run the full search)
@@ -48,9 +49,11 @@ ENTRY_POINTS = [
     [sys.executable, "-m", "repro.launch.serve", "--help"],
     [sys.executable, "-m", "repro.launch.dryrun", "--help"],
     [sys.executable, "-m", "repro.launch.roofline", "--help"],
+    [sys.executable, "-m", "repro.launch.export", "--help"],
     [sys.executable, "-m", "benchmarks.run", "--help"],
     [sys.executable, "-m", "benchmarks.kernel_micro", "--help"],
     [sys.executable, "examples/pareto_sweep.py", "--help"],
+    [sys.executable, "examples/approx_nn_inference.py", "--help"],
     [sys.executable, "examples/train_lm.py", "--help"],
     [sys.executable, "tools/check_bench.py", "--help"],
     [sys.executable, "-m", "pytest", "--help"],
@@ -64,7 +67,11 @@ REQUIRED_FLAGS = {
                                     "--sample-size", "--input-dist",
                                     "--certify", "--certify-budget",
                                     "--async-commit", "--migrate-every",
-                                    "--migrate-timeout"],
+                                    "--migrate-timeout",
+                                    "--export-artifacts"],
+    ("-m", "repro.launch.serve"): ["--approx-lut", "--summary-out"],
+    ("-m", "repro.launch.export"): ["--results-dir", "--out", "--top-k",
+                                    "--require-certified", "--verify"],
     ("-m", "benchmarks.kernel_micro"): ["--layout", "--tune", "--json",
                                         "--smoke"],
     ("tools/check_bench.py",): ["--baseline", "--max-regression"],
